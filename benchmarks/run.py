@@ -1,0 +1,176 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  table1_*          — paper Table I metrics (derived = the metric value)
+  fig2_mab_*        — decision-model convergence (Fig. 2 behaviour)
+  split_tradeoff_*  — §III-A layer-vs-semantic latency/accuracy trade
+  kernel_*          — Pallas kernel wall-time + max-err vs jnp oracle
+  roofline_*        — §Roofline headline bounds from the dry-run artifacts
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO / "benchmarks"))
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+# ------------------------------------------------------------------ Table I
+def table1(quick: bool = False):
+    from repro.sim.simulator import Simulator
+    from repro.sched.a3c import A3CPlacement
+    from repro.sched.policies import (CompressionScheduler,
+                                      SplitPlaceScheduler)
+    n = 600 if quick else 3000
+    for name, mk in [
+        ("table1_baseline", lambda: CompressionScheduler(A3CPlacement())),
+        ("table1_splitplace",
+         lambda: SplitPlaceScheduler(A3CPlacement(), bandit="ucb")),
+    ]:
+        t0 = time.perf_counter()
+        m = Simulator(mk(), seed=1).run(n)
+        dt_us = (time.perf_counter() - t0) * 1e6 / n
+        emit(f"{name}_reward", dt_us, m["reward"])
+        emit(f"{name}_sla_violation", dt_us, m["sla_violation"])
+        emit(f"{name}_accuracy", dt_us, m["accuracy"])
+        emit(f"{name}_energy_wh", dt_us, m["energy_wh"])
+
+
+# ----------------------------------------------------- Fig. 2 MAB behaviour
+def fig2_mab(quick: bool = False):
+    import jax
+    import jax.numpy as jnp
+    from repro.core.decision import SplitDecisionEngine
+    n = 150 if quick else 600
+    for bandit in ["ucb", "thompson", "egreedy"]:
+        eng = SplitDecisionEngine(1, bandit=bandit, ema_init_values=[2.0],
+                                  **({"c": 0.3} if bandit == "ucb" else {}))
+        st = eng.init(jax.random.PRNGKey(0))
+        dec_j = jax.jit(eng.decide)
+        obs_j = jax.jit(eng.observe)
+        rng = np.random.default_rng(0)
+        tight_sem = []
+        t0 = time.perf_counter()
+        for i in range(n):
+            sla = 0.9 if rng.random() < 0.5 else 4.0
+            arm, ctx, st = dec_j(st, jnp.asarray(0), jnp.asarray(sla))
+            a = int(arm)
+            rt = 2.0 if a == 0 else 0.7
+            st = obs_j(st, jnp.asarray(0), ctx, arm, jnp.asarray(rt),
+                       jnp.asarray(sla), jnp.asarray(0.93 if a == 0 else 0.89))
+            if sla < 1.0 and i > n // 2:
+                tight_sem.append(a)
+        us = (time.perf_counter() - t0) * 1e6 / n
+        emit(f"fig2_mab_{bandit}_tight_semantic_frac", us,
+             round(float(np.mean(tight_sem)), 3))
+
+
+# ------------------------------------------------- §III-A split trade-off
+def split_tradeoff(quick: bool = False):
+    from repro.sim.simulator import Simulator, LAYER, SEMANTIC
+    from repro.sched.baselines import LeastLoadedPlacement
+    from repro.sched.policies import FixedDecisionScheduler
+    n = 500 if quick else 1500
+    for name, dec in [("layer", LAYER), ("semantic", SEMANTIC)]:
+        t0 = time.perf_counter()
+        m = Simulator(FixedDecisionScheduler(LeastLoadedPlacement(), dec),
+                      seed=3, rate=0.3).run(n)
+        us = (time.perf_counter() - t0) * 1e6 / n
+        emit(f"split_tradeoff_{name}_response_s", us, m["mean_response_s"])
+        emit(f"split_tradeoff_{name}_accuracy", us, m["accuracy"])
+
+
+# ----------------------------------------------------------------- kernels
+def kernels(quick: bool = False):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.block_diag_matmul import block_diag_matmul
+    from repro.kernels.moe_gmm import moe_gmm
+    from repro.kernels.ssm_scan import ssm_scan
+    from repro.kernels.decode_attention import decode_attention
+
+    rng = np.random.default_rng(0)
+    arr = lambda s: jnp.asarray(rng.normal(size=s), jnp.float32)
+
+    def bench(name, fn, oracle, args, n=3):
+        out = fn(*args)                     # compile + correctness
+        exp = oracle(*args)
+        err = float(jnp.max(jnp.abs(out - exp)))
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args))
+        us = (time.perf_counter() - t0) * 1e6 / n
+        emit(f"kernel_{name}_maxerr", us, f"{err:.2e}")
+
+    q, k, v = arr((1, 256, 4, 64)), arr((1, 256, 2, 64)), arr((1, 256, 2, 64))
+    bench("flash_attention",
+          lambda q, k, v: flash_attention(q, k, v, interpret=True),
+          ref.flash_attention_ref, (q, k, v))
+    x, w = arr((4, 128, 128)), arr((4, 128, 128))
+    bench("block_diag_matmul",
+          lambda x, w: block_diag_matmul(x, w, interpret=True),
+          ref.block_diag_matmul_ref, (x, w))
+    bench("moe_gmm", lambda x, w: moe_gmm(x, w, interpret=True),
+          ref.moe_gmm_ref, (x, w))
+    a = jnp.asarray(rng.uniform(0.8, 0.99, (1, 128, 16, 8)), jnp.float32)
+    b = arr((1, 128, 16, 8))
+    bench("ssm_scan", lambda a, b: ssm_scan(a, b, interpret=True),
+          ref.ssm_scan_ref, (a, b))
+    q1, kc, vc = arr((2, 8, 64)), arr((2, 256, 2, 64)), arr((2, 256, 2, 64))
+    ln = jnp.asarray([200, 256], jnp.int32)
+    bench("decode_attention",
+          lambda q, k, v, l: decode_attention(q, k, v, l, interpret=True),
+          ref.decode_attention_ref, (q1, kc, vc, ln))
+
+
+# ---------------------------------------------------------------- roofline
+def roofline(quick: bool = False):
+    rl = REPO / "experiments" / "roofline.json"
+    if not rl.exists():
+        print("# roofline.json missing — run benchmarks/roofline.py first",
+              file=sys.stderr)
+        return
+    rows = json.loads(rl.read_text())
+    for r in rows:
+        if r["multi_pod"] or r.get("variant"):
+            continue
+        emit(f"roofline_{r['arch']}_{r['shape']}_bound_s", 0.0, r["bound_s"])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    table1(args.quick)
+    fig2_mab(args.quick)
+    split_tradeoff(args.quick)
+    kernels(args.quick)
+    roofline(args.quick)
+    out = REPO / "experiments" / "bench_results.csv"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text("name,us_per_call,derived\n" + "\n".join(
+        f"{n},{u:.1f},{d}" for n, u, d in ROWS) + "\n")
+    print(f"# {len(ROWS)} rows -> {out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

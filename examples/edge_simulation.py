@@ -1,0 +1,47 @@
+"""End-to-end reproduction of the paper's evaluation (Table I).
+
+10 RPi-class hosts, Gaussian network noise, Poisson arrivals of
+ResNet50V2/MobileNetV2/InceptionV3 jobs with SLA deadlines.  Compares the
+compression baseline against SplitPlace (MAB + A3C) and the two fixed-arm
+ablations.
+
+    PYTHONPATH=src python examples/edge_simulation.py [--intervals 3000]
+"""
+import argparse
+import json
+
+from repro.sched.a3c import A3CPlacement
+from repro.sched.policies import (CompressionScheduler,
+                                  FixedDecisionScheduler, SplitPlaceScheduler)
+from repro.sim.simulator import LAYER, SEMANTIC, Simulator
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--intervals", type=int, default=3000)
+    ap.add_argument("--seed", type=int, default=1)
+    args = ap.parse_args()
+
+    policies = [
+        ("baseline (compression+A3C)",
+         lambda: CompressionScheduler(A3CPlacement())),
+        ("SplitPlace (UCB MAB+A3C)",
+         lambda: SplitPlaceScheduler(A3CPlacement(), bandit="ucb")),
+        ("SplitPlace (Thompson)",
+         lambda: SplitPlaceScheduler(A3CPlacement(), bandit="thompson")),
+        ("always-layer", lambda: FixedDecisionScheduler(A3CPlacement(), LAYER)),
+        ("always-semantic",
+         lambda: FixedDecisionScheduler(A3CPlacement(), SEMANTIC)),
+    ]
+    print(f"{'policy':30s} {'reward':>7s} {'SLAviol':>8s} {'acc':>6s} "
+          f"{'energy':>7s} {'resp_s':>7s} {'sem%':>5s}")
+    for name, mk in policies:
+        m = Simulator(mk(), seed=args.seed).run(args.intervals)
+        print(f"{name:30s} {m['reward']:7.4f} {m['sla_violation']:8.4f} "
+              f"{m['accuracy']:6.4f} {m['energy_wh']:7.2f} "
+              f"{m['mean_response_s']:7.3f} "
+              f"{m['decisions_semantic_frac']*100:5.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""End-to-end training driver: a ~100M-param decoder trained for a few
+hundred steps on the synthetic pipeline, in any of the three execution modes.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300
+    PYTHONPATH=src python examples/train_100m.py --mode pipeline  # layer split
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--mode", default="fsdp",
+                    choices=["fsdp", "semantic", "pipeline"])
+    ap.add_argument("--arch", default="xlstm-125m")
+    args = ap.parse_args()
+    # xlstm-125m at full config IS ~100M-class; train a reduced variant wide
+    # enough to be non-trivial but CPU-feasible for a few hundred steps.
+    train_main(["--arch", args.arch, "--reduced", "--steps", str(args.steps),
+                "--seq-len", "128", "--batch", "8", "--mode", args.mode,
+                "--lr", "1e-3", "--ckpt", "/tmp/repro_ckpt",
+                "--log-every", "20"])
+
+
+if __name__ == "__main__":
+    main()

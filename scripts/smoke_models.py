@@ -1,0 +1,31 @@
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs.base import get_config, ASSIGNED
+from repro.models.model import build_model
+
+key = jax.random.PRNGKey(0)
+for name in ASSIGNED:
+    cfg = get_config(name).reduced()
+    model = build_model(cfg)
+    params = model.init(key)
+    b, s = 2, 16
+    batch = {"tokens": jnp.zeros((b, s), jnp.int32),
+             "labels": jnp.zeros((b, s), jnp.int32)}
+    if cfg.is_encdec:
+        batch["audio_embeds"] = jnp.ones((b, cfg.frontend.n_tokens,
+                                          cfg.frontend.d_frontend), jnp.float32)
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        batch["image_embeds"] = jnp.ones((b, cfg.frontend.n_tokens,
+                                          cfg.frontend.d_frontend), jnp.float32)
+    logits, aux = model.forward(params, batch)
+    loss = model.loss(params, batch)
+    assert logits.shape == (b, s, cfg.vocab_size), (name, logits.shape)
+    assert np.isfinite(np.asarray(loss)), name
+    # decode one step
+    cache = model.init_cache(b, 32)
+    dl, cache2 = model.decode_step(params, cache, jnp.zeros((b, 1), jnp.int32), 0,
+                                   batch=batch if cfg.is_encdec else None)
+    assert dl.shape == (b, 1, cfg.vocab_size), (name, dl.shape)
+    assert np.isfinite(np.asarray(dl)).all(), name
+    print(f"OK {name}: loss={float(loss):.3f} params={cfg.param_count()/1e6:.1f}M(reduced)")
+print("all smoke OK")

@@ -1,0 +1,75 @@
+"""Sharding-aware npz checkpointing.
+
+Saves the param/optimizer pytree as flat npz entries (path-keyed), gathering
+sharded arrays to host; restore re-places leaves onto the current mesh with
+the caller's shardings.  Atomic via tmp-file rename.  No external deps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(path: str, tree, *, step: Optional[int] = None) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    def host(v):
+        v = np.asarray(jax.device_get(v))
+        if v.dtype not in (np.float32, np.float64, np.int32, np.int64,
+                           np.int8, np.uint8, np.bool_, np.int16, np.uint32):
+            v = v.astype(np.float32)   # bf16 etc: store widened (npz-safe)
+        return v
+    flat = {k: host(v) for k, v in _flatten(tree).items()}
+    tmp = path.with_suffix(".tmp.npz")
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    meta = {"step": step, "n_leaves": len(flat)}
+    path.with_suffix(".meta.json").write_text(json.dumps(meta))
+
+
+def restore(path: str, target, *, shardings=None):
+    """target: pytree of like-shaped arrays/ShapeDtypeStructs (the template)."""
+    data = np.load(path)
+    flat_target = _flatten(target)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+
+    def rebuild(key, leaf):
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        if key in flat_shard:
+            return jax.device_put(jnp.asarray(arr).astype(leaf.dtype),
+                                  flat_shard[key])
+        return jnp.asarray(arr).astype(leaf.dtype)
+    rebuilt = {k: rebuild(k, v) for k, v in flat_target.items()}
+
+    leaves, treedef = jax.tree_util.tree_flatten(target)
+    keys = list(_flatten(target).keys())
+    return jax.tree_util.tree_unflatten(treedef, [rebuilt[k] for k in keys])
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    d = pathlib.Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = []
+    for f in d.glob("step_*.npz"):
+        try:
+            steps.append(int(f.stem.split("_")[1]))
+        except (IndexError, ValueError):
+            continue
+    return max(steps) if steps else None

@@ -1,0 +1,85 @@
+"""SplitDecisionEngine — Figure 2 of the paper.
+
+For workload ``w_t`` of application class ``a`` with deadline ``SLA_w``:
+  1. context = bucket(SLA_w / E_a) where E_a is the EMA of layer-split
+     execution times for class a,
+  2. a per-class contextual MAB picks the arm {layer, semantic},
+  3. after the workload completes, the engine observes
+     (response_time, sla, accuracy), computes the paper reward, updates the
+     MAB, and (for layer-split runs) updates E_a.
+
+The engine is a pure-functional pytree and is agnostic to the underlying
+placement scheduler, exactly as the paper requires.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mab
+from repro.core.estimator import EMAState, ema_get, ema_init, ema_update
+from repro.core.reward import workload_reward
+
+
+class EngineState(NamedTuple):
+    bandit: object            # per-app stacked bandit state ([n_apps, ...])
+    ema: EMAState
+    key: jax.Array
+
+
+class SplitDecisionEngine:
+    def __init__(self, n_apps: int, bandit: str = "ucb", n_ctx: int = 8,
+                 ema_decay: float = 0.2, ema_init_values=None, **bandit_kw):
+        self.n_apps = n_apps
+        self.n_ctx = n_ctx
+        self.ema_decay = ema_decay
+        self.ema_init_values = ema_init_values  # profiled E_a warm start
+        init, select, update = mab.BANDITS[bandit]
+        self._init, self._select, self._update = init, select, update
+        self._bandit_kw = bandit_kw
+
+    def init(self, key) -> EngineState:
+        one = self._init(self.n_ctx, **self._bandit_kw)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.n_apps,) + x.shape).copy(), one)
+        ema = ema_init(self.n_apps, decay=self.ema_decay)
+        if self.ema_init_values is not None:
+            ema = ema._replace(value=jnp.asarray(self.ema_init_values,
+                                                 jnp.float32))
+        return EngineState(stacked, ema, key)
+
+    # ------------------------------------------------------------- decide
+    def decide(self, state: EngineState, app: jax.Array, sla: jax.Array):
+        """Returns (decision, context, new_state).  decision: 0=layer, 1=semantic."""
+        ea = ema_get(state.ema, app)
+        ctx = mab.context_bucket(sla / jnp.maximum(ea, 1e-6), self.n_ctx)
+        key, sub = jax.random.split(state.key)
+        bstate = jax.tree.map(lambda x: x[app], state.bandit)
+        arm = self._select(bstate, ctx, sub)
+        return arm, ctx, EngineState(state.bandit, state.ema, key)
+
+    # ------------------------------------------------------------- observe
+    def observe(self, state: EngineState, app, ctx, arm, response_time, sla,
+                accuracy) -> EngineState:
+        r = workload_reward(response_time, sla, accuracy)
+        bstate = jax.tree.map(lambda x: x[app], state.bandit)
+        bnew = self._update(bstate, ctx, arm, r)
+        bandit = jax.tree.map(lambda full, new: full.at[app].set(new),
+                              state.bandit, bnew)
+        # E_a tracks LAYER-split execution times only (paper §III-B)
+        ema = jax.lax.cond(
+            arm == mab.LAYER,
+            lambda e: ema_update(e, app, response_time),
+            lambda e: e, state.ema)
+        return EngineState(bandit, ema, state.key)
+
+    # ---------------------------------------------------- one-shot wrapper
+    def step(self, state: EngineState, app, sla, outcome_fn):
+        """decide -> run outcome_fn(arm) -> observe. outcome_fn returns
+        (response_time, accuracy)."""
+        arm, ctx, state = self.decide(state, app, sla)
+        rt, acc = outcome_fn(arm)
+        state = self.observe(state, app, ctx, arm, rt, sla, acc)
+        return arm, rt, state

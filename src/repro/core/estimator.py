@@ -1,0 +1,36 @@
+"""Moving-average execution-time estimators (paper §III-B: ``E_a``).
+
+Per application class ``a`` we track an exponential moving average of the
+observed end-to-end execution time of *layer-split* deployments; the decision
+context is the ratio ``SLA_w / E_a``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EMAState(NamedTuple):
+    value: jax.Array     # [n_apps] current estimate
+    count: jax.Array     # [n_apps] observation counts
+    decay: jax.Array     # scalar
+
+
+def ema_init(n_apps: int, init_value: float = 1.0, decay: float = 0.2) -> EMAState:
+    return EMAState(jnp.full((n_apps,), init_value), jnp.zeros((n_apps,)),
+                    jnp.asarray(decay))
+
+
+def ema_update(state: EMAState, app: jax.Array, obs: jax.Array) -> EMAState:
+    """First observation snaps to obs; later ones blend with decay."""
+    cur = state.value[app]
+    new = jnp.where(state.count[app] == 0, obs,
+                    (1.0 - state.decay) * cur + state.decay * obs)
+    return EMAState(state.value.at[app].set(new),
+                    state.count.at[app].add(1.0), state.decay)
+
+
+def ema_get(state: EMAState, app: jax.Array) -> jax.Array:
+    return state.value[app]

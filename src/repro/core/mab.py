@@ -1,0 +1,115 @@
+"""JAX-native contextual Multi-Armed Bandits — the paper's decision layer.
+
+The paper (§III-B) runs, per application class, MAB models that estimate the
+expected reward of each split decision {layer, semantic} given the workload's
+SLA deadline.  We discretize the context as buckets of the ratio
+``SLA / E_a`` (deadline vs. the moving-average layer-split execution time):
+ratios < 1 mean a layer split would likely violate the SLA.
+
+All bandits are pure-functional pytrees: ``init -> state``,
+``select(state, ctx, key) -> arm``, ``update(state, ctx, arm, reward) -> state``.
+They jit, vmap (over application classes) and scan (over workload streams).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+N_ARMS = 2          # 0 = layer split, 1 = semantic split
+LAYER, SEMANTIC = 0, 1
+
+
+def context_bucket(sla_ratio: jax.Array, n_ctx: int) -> jax.Array:
+    """Bucket SLA/E_a into n_ctx bins on a log-ish scale around 1.0."""
+    edges = jnp.concatenate([
+        jnp.array([0.0]),
+        jnp.geomspace(0.25, 4.0, n_ctx - 1),
+    ])
+    return jnp.clip(jnp.searchsorted(edges, sla_ratio) - 1, 0, n_ctx - 1)
+
+
+# ---------------------------------------------------------------------- UCB1
+class UCBState(NamedTuple):
+    counts: jax.Array   # [n_ctx, N_ARMS]
+    means: jax.Array    # [n_ctx, N_ARMS]
+    t: jax.Array        # scalar step counter
+    c: jax.Array        # exploration coefficient
+
+
+def ucb_init(n_ctx: int = 8, c: float = 1.0) -> UCBState:
+    return UCBState(jnp.zeros((n_ctx, N_ARMS)), jnp.zeros((n_ctx, N_ARMS)),
+                    jnp.zeros(()), jnp.asarray(c))
+
+
+def ucb_select(state: UCBState, ctx: jax.Array, key=None) -> jax.Array:
+    n = state.counts[ctx]
+    bonus = state.c * jnp.sqrt(jnp.log(state.t + 1.0) / jnp.maximum(n, 1e-9))
+    score = jnp.where(n == 0, jnp.inf, state.means[ctx] + bonus)
+    return jnp.argmax(score)
+
+
+def ucb_update(state: UCBState, ctx, arm, reward) -> UCBState:
+    n = state.counts[ctx, arm] + 1.0
+    mean = state.means[ctx, arm] + (reward - state.means[ctx, arm]) / n
+    return UCBState(state.counts.at[ctx, arm].set(n),
+                    state.means.at[ctx, arm].set(mean),
+                    state.t + 1.0, state.c)
+
+
+# ----------------------------------------------------------------- Thompson
+class TSState(NamedTuple):
+    alpha: jax.Array    # [n_ctx, N_ARMS]
+    beta: jax.Array     # [n_ctx, N_ARMS]
+
+
+def ts_init(n_ctx: int = 8, prior: float = 1.0) -> TSState:
+    return TSState(jnp.full((n_ctx, N_ARMS), prior),
+                   jnp.full((n_ctx, N_ARMS), prior))
+
+
+def ts_select(state: TSState, ctx, key) -> jax.Array:
+    samples = jax.random.beta(key, state.alpha[ctx], state.beta[ctx])
+    return jnp.argmax(samples)
+
+
+def ts_update(state: TSState, ctx, arm, reward) -> TSState:
+    """Fractional Beta update: reward in [0,1] treated as success mass."""
+    r = jnp.clip(reward, 0.0, 1.0)
+    return TSState(state.alpha.at[ctx, arm].add(r),
+                   state.beta.at[ctx, arm].add(1.0 - r))
+
+
+# ---------------------------------------------------------------- ε-greedy
+class EGState(NamedTuple):
+    counts: jax.Array
+    means: jax.Array
+    eps: jax.Array
+
+
+def eg_init(n_ctx: int = 8, eps: float = 0.1) -> EGState:
+    return EGState(jnp.zeros((n_ctx, N_ARMS)), jnp.zeros((n_ctx, N_ARMS)),
+                   jnp.asarray(eps))
+
+
+def eg_select(state: EGState, ctx, key) -> jax.Array:
+    ke, ka = jax.random.split(key)
+    greedy = jnp.argmax(jnp.where(state.counts[ctx] == 0, jnp.inf,
+                                  state.means[ctx]))
+    rand = jax.random.randint(ka, (), 0, N_ARMS)
+    return jnp.where(jax.random.uniform(ke) < state.eps, rand, greedy)
+
+
+def eg_update(state: EGState, ctx, arm, reward) -> EGState:
+    n = state.counts[ctx, arm] + 1.0
+    mean = state.means[ctx, arm] + (reward - state.means[ctx, arm]) / n
+    return EGState(state.counts.at[ctx, arm].set(n),
+                   state.means.at[ctx, arm].set(mean), state.eps)
+
+
+BANDITS = {
+    "ucb": (ucb_init, ucb_select, ucb_update),
+    "thompson": (ts_init, ts_select, ts_update),
+    "egreedy": (eg_init, eg_select, eg_update),
+}

@@ -1,0 +1,21 @@
+"""The paper's reward (§III-B):
+
+    R(W) = sum_w [ 1(ResponseTime_w <= SLA_w) + Accuracy_w ] / (2 |W|)
+
+Per-workload reward is the same expression without the |W| normalization —
+it is what the MAB models learn from.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def workload_reward(response_time, sla, accuracy):
+    met = jnp.asarray(response_time <= sla, jnp.float32)
+    return (met + jnp.asarray(accuracy, jnp.float32)) / 2.0
+
+
+def batch_reward(response_times, slas, accuracies):
+    return jnp.mean(workload_reward(jnp.asarray(response_times),
+                                    jnp.asarray(slas),
+                                    jnp.asarray(accuracies)))

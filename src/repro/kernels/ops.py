@@ -1,0 +1,68 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the kernels VALIDATE on CPU; on a
+real TPU backend the compiled kernel runs.  ``use_kernels(False)`` routes
+every op to its pure-jnp oracle (repro.kernels.ref) — the fsdp/semantic/
+pipeline runners call through these ops so the kernel layer is swappable.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.block_diag_matmul import block_diag_matmul as _bdm
+from repro.kernels.decode_attention import decode_attention as _dec
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.moe_gmm import moe_gmm as _gmm
+from repro.kernels.ssm_scan import ssm_scan as _scan
+
+_STATE = {"enabled": True}
+
+
+def use_kernels(enabled: bool):
+    _STATE["enabled"] = bool(enabled)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap"))
+def flash_attention(q, k, v, causal=True, window=0, softcap=0.0):
+    if not _STATE["enabled"]:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       softcap=softcap)
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  interpret=_interpret())
+
+
+@jax.jit
+def block_diag_matmul(x, w):
+    if not _STATE["enabled"]:
+        return ref.block_diag_matmul_ref(x, w)
+    return _bdm(x, w, interpret=_interpret())
+
+
+@jax.jit
+def moe_gmm(x, w):
+    if not _STATE["enabled"]:
+        return ref.moe_gmm_ref(x, w)
+    return _gmm(x, w, interpret=_interpret())
+
+
+@jax.jit
+def ssm_scan(a, b):
+    if not _STATE["enabled"]:
+        return ref.ssm_scan_ref(a, b)
+    return _scan(a, b, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("softcap",))
+def decode_attention(q, k_cache, v_cache, length, softcap=0.0):
+    if not _STATE["enabled"]:
+        return ref.decode_attention_ref(q, k_cache, v_cache, length,
+                                        softcap=softcap)
+    return _dec(q, k_cache, v_cache, length, softcap=softcap,
+                interpret=_interpret())

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    b, sq, h, hd = q.shape
+    _, sk, kh, _ = k.shape
+    rep = h // kh
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > (qpos - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def block_diag_matmul_ref(x, w):
+    return jnp.einsum("btd,bde->bte", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def block_diag_dense_ref(x, w):
+    """The dense equivalent: embed w into a big block-diagonal matrix."""
+    bb, t, d = x.shape
+    _, _, e = w.shape
+    big = jnp.zeros((bb * d, bb * e), jnp.float32)
+    for i in range(bb):
+        big = big.at[i * d:(i + 1) * d, i * e:(i + 1) * e].set(
+            w[i].astype(jnp.float32))
+    xf = x.transpose(1, 0, 2).reshape(t, bb * d).astype(jnp.float32)
+    out = xf @ big
+    return out.reshape(t, bb, e).transpose(1, 0, 2).astype(x.dtype)
+
+
+def moe_gmm_ref(x, w):
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssm_scan_ref(a, b):
+    """h_t = a_t h_{t-1} + b_t via lax.scan (time axis=1)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at.astype(jnp.float32) * h + bt.astype(jnp.float32)
+        return h, h
+    aT = jnp.swapaxes(a, 0, 1)
+    bT = jnp.swapaxes(b, 0, 1)
+    h0 = jnp.zeros(a.shape[:1] + a.shape[2:], jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (aT, bT))
+    return jnp.swapaxes(hs, 0, 1).astype(a.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, length, *, softcap=0.0):
+    b, h, hd = q.shape
+    _, L, kh, _ = k_cache.shape
+    rep = h // kh
+    k = jnp.repeat(k_cache, rep, axis=2)
+    v = jnp.repeat(v_cache, rep, axis=2)
+    s = jnp.einsum("bhd,blhd->bhl", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = jnp.arange(L)[None, None, :] < length[:, None, None]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhl,blhd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)

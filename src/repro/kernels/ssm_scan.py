@@ -1,0 +1,60 @@
+"""Chunked selective-scan (Mamba / linear-recurrence) — Pallas TPU kernel.
+
+Computes h_t = a_t * h_{t-1} + b_t over time for [B, S, D, N] gates/inputs.
+TPU adaptation: time is processed in CHUNK-sized slabs resident in VMEM; the
+running state [D, N] stays in VMEM scratch between slabs (sequential grid
+dimension), so HBM traffic is one read of (a, b) + one write of h — the op is
+bandwidth-bound and the kernel hits that bound instead of materializing
+per-step intermediates like the naive lax.scan lowering.
+
+Grid: (B, S / CHUNK) with the time axis marked "arbitrary" (sequential).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, b_ref, h_ref, state_ref, *, chunk: int):
+    # a_ref/b_ref/h_ref: [chunk, D, N]; state_ref (scratch): [D, N]
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    def body(t, state):
+        a = a_ref[t]
+        b = b_ref[t]
+        state = a.astype(jnp.float32) * state + b.astype(jnp.float32)
+        h_ref[t] = state.astype(h_ref.dtype)
+        return state
+
+    state = jax.lax.fori_loop(0, chunk, body, state_ref[...])
+    state_ref[...] = state
+
+
+def ssm_scan(a, b, *, chunk: int = 64, interpret: bool = False):
+    """a, b: [B, S, D, N] -> h: [B, S, D, N] with h_t = a_t h_{t-1} + b_t."""
+    bs, s, d, n = a.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bs, s // chunk),
+        in_specs=[
+            pl.BlockSpec((None, chunk, d, n), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((None, chunk, d, n), lambda bi, ci: (bi, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, d, n),
+                               lambda bi, ci: (bi, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bs, s, d, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((d, n), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,93 @@
+"""Sweep driver: baseline dry-run for every (arch x shape) on the single-pod
+mesh AND the 2-pod mesh.  Each run is a subprocess (fresh XLA_FLAGS / device
+state).  Results land in experiments/dryrun/*.json + *.hlo.txt.
+
+    PYTHONPATH=src python -m repro.launch.run_dryruns [--skip-existing] \
+        [--arch yi-34b] [--shape train_4k] [--pods 1,2]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import subprocess
+import sys
+import time
+
+REPO = pathlib.Path(__file__).resolve().parents[3]
+OUT = REPO / "experiments" / "dryrun"
+
+ARCHS = [
+    "phi3.5-moe-42b-a6.6b", "yi-34b", "gemma2-27b", "qwen2-moe-a2.7b",
+    "jamba-1.5-large-398b", "whisper-base", "stablelm-1.6b", "xlstm-125m",
+    "internvl2-26b", "starcoder2-15b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+SKIP = {("whisper-base", "long_500k")}  # DESIGN.md §5
+
+
+def tag_for(arch, shape, multi_pod, mode):
+    return f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}__{mode}"
+
+
+def default_mode(arch):
+    return "fsdp" if arch == "whisper-base" else "pipeline"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--pods", default="1,2")
+    ap.add_argument("--mode", default=None)
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else SHAPES
+    pods = [int(p) for p in args.pods.split(",")]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            if (arch, shape) in SKIP:
+                print(f"SKIP {arch} x {shape} (DESIGN.md §5)", flush=True)
+                continue
+            for pod in pods:
+                mode = args.mode or default_mode(arch)
+                tag = tag_for(arch, shape, pod == 2, mode)
+                if args.skip_existing and (OUT / f"{tag}.json").exists():
+                    print(f"skip existing {tag}", flush=True)
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape]
+                if mode != default_mode(arch):
+                    cmd += ["--mode", mode]
+                if args.mode:
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--mode", mode]
+                if pod == 2:
+                    cmd.append("--multi-pod")
+                t0 = time.time()
+                import os
+                env = dict(os.environ)
+                env["PYTHONPATH"] = str(REPO / "src")
+                env.pop("XLA_FLAGS", None)
+                r = subprocess.run(cmd, cwd=REPO, timeout=args.timeout,
+                                   env=env, capture_output=True, text=True)
+                ok = r.returncode == 0
+                dt = time.time() - t0
+                print(f"{'OK  ' if ok else 'FAIL'} {tag}  ({dt:.0f}s)",
+                      flush=True)
+                if not ok:
+                    print(r.stdout[-1500:], flush=True)
+                    print(r.stderr[-3000:], flush=True)
+                results.append((tag, ok))
+    n_ok = sum(1 for _, ok in results)
+    print(f"\n{n_ok}/{len(results)} dry-runs OK")
+    if n_ok < len(results):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serving launcher: SplitPlace server over a chosen architecture and mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
+        --batches 8 --reduced
+
+For pod-scale layout experiments use launch/dryrun.py (AOT, no allocation);
+this driver executes real steps on the available devices.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.serving.server import Request, SplitPlaceServer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--mesh", default="1,1")
+    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--bandit", default="ucb")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    dims = tuple(int(x) for x in args.mesh.split(","))
+    mesh = jax.make_mesh(dims, ("data", "model")[:len(dims)] if len(dims) == 2
+                         else ("pod", "data", "model"))
+    server = SplitPlaceServer(cfg, mesh, cache_len=args.cache_len,
+                              bandit=args.bandit)
+    rng = np.random.default_rng(0)
+    rid = 0
+    for b in range(args.batches):
+        reqs = []
+        for _ in range(args.batch_size):
+            tight = rng.random() < 0.5
+            reqs.append(Request(
+                rid=rid, app_id=int(rng.integers(3)),
+                tokens=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                sla_s=float(0.05 if tight else 5.0), max_new=4))
+            rid += 1
+        server.serve_batch(reqs)
+    print(json.dumps(server.summary(), indent=2))
+
+
+if __name__ == "__main__":
+    main()

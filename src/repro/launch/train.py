@@ -1,0 +1,99 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+        --mode pipeline --steps 200 --seq-len 128 --batch 8 --d-model 256
+
+Runs on whatever devices exist (CPU smoke: pass --debug-mesh to force a 2x2
+fake-device mesh via XLA_FLAGS before starting python, or use --mesh 1,1).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.checkpoint import save
+from repro.configs.base import get_config
+from repro.data.pipeline import batches_for
+from repro.dist import api as A
+from repro.optim.adamw import adamw_init, cosine_schedule
+
+
+def make_mesh(spec: str):
+    dims = [int(x) for x in spec.split(",")]
+    names = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
+    return jax.make_mesh(tuple(dims), names)
+
+
+def shardings(mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--mode", default="fsdp",
+                    choices=["fsdp", "semantic", "pipeline"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default="1,1")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale variant of the arch")
+    ap.add_argument("--d-model", type=int, default=0,
+                    help="override d_model (with --reduced)")
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        if args.d_model:
+            cfg = cfg.replace(d_model=args.d_model)
+    cfg = cfg.replace(dtype="float32")
+
+    mesh = make_mesh(args.mesh)
+    runner = A.build_runner(cfg, args.mode, mesh)
+    rcfg = runner.cfg
+    key = jax.random.PRNGKey(0)
+    params = runner.init(key)
+    opt = adamw_init(params)
+    p_specs = runner.param_specs(params)
+    p_shard = shardings(mesh, p_specs)
+    params = jax.device_put(params, p_shard)
+
+    sched = cosine_schedule(args.lr, warmup=max(args.steps // 20, 1),
+                            total=args.steps)
+    step_fn = A.make_train_step(runner, lr=args.lr, remat=True)
+    o_shard = shardings(mesh, A.make_opt_specs(p_specs))
+    jstep = jax.jit(step_fn, in_shardings=(p_shard, o_shard, None),
+                    out_shardings=(p_shard, o_shard, None), donate_argnums=(0, 1))
+
+    data = batches_for(rcfg, seq_len=args.seq_len, global_batch=args.batch)
+    losses = []
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, loss = jstep(params, opt, batch)
+        losses.append(float(loss))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"({dt / (step + 1):.2f}s/step)", flush=True)
+    if args.ckpt:
+        save(f"{args.ckpt}/step_{args.steps}.npz", params, step=args.steps)
+        print(f"checkpoint -> {args.ckpt}/step_{args.steps}.npz")
+    print(f"first-10 mean {np.mean(losses[:10]):.4f} -> "
+          f"last-10 mean {np.mean(losses[-10:]):.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

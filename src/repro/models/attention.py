@@ -1,0 +1,127 @@
+"""Chunked (flash-style) attention in pure JAX — the memory-safe XLA path.
+
+Never materializes the [Sq, Sk] score matrix: lax.scan over KV blocks with an
+online-softmax running (max, sum, acc).  The whole op is wrapped in
+jax.checkpoint so the backward pass recomputes blocks instead of saving them
+(classic flash backward memory behaviour).
+
+Dispatch (repro.kernels.ops / layers.attn_apply):
+  TPU backend  -> Pallas flash_attention kernel (custom_vjp, this as backward)
+  CPU/dry-run  -> this implementation (small HLO via scan; no S^2 temps)
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.checkpoint, static_argnums=(3, 4, 5, 6, 7))
+def _chunked(q, k, v, causal: bool, window: int, softcap: float,
+             q_chunk: int, k_chunk: int):
+    b, sq, h, hd = q.shape
+    _, sk, kh, _ = k.shape
+    rep = h // kh
+    scale = 1.0 / math.sqrt(hd)
+    nq = sq // q_chunk
+    nk = sk // k_chunk
+    # [nq, b, h, qc, hd]
+    qs = jnp.moveaxis(
+        q.reshape(b, nq, q_chunk, h, hd), 1, 0).transpose(0, 1, 3, 2, 4)
+    ks = jnp.moveaxis(
+        k.reshape(b, nk, k_chunk, kh, hd), 1, 0).transpose(0, 1, 3, 2, 4)
+    vs = jnp.moveaxis(
+        v.reshape(b, nk, k_chunk, kh, hd), 1, 0).transpose(0, 1, 3, 2, 4)
+
+    q_off = sk - sq  # queries sit at the END of the key range
+
+    def q_block(_, qi_qc):
+        qi, qc = qi_qc                              # qc: [b, h, qcnk, hd]
+        qcf = qc.astype(jnp.float32) * scale
+        qpos = qi * q_chunk + jax.lax.iota(jnp.int32, q_chunk) + q_off
+
+        def kv_block(carry, ki_kv):
+            acc, m_prev, l_prev = carry
+            ki, kc, vc = ki_kv
+            kg = jnp.repeat(kc, rep, axis=1)        # [b, h, kcnk, hd]
+            vg = jnp.repeat(vc, rep, axis=1)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qcf, kg.astype(jnp.float32))
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            kpos = ki * k_chunk + jax.lax.iota(jnp.int32, k_chunk)
+            mask = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                mask = kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= kpos[None, :] > (qpos[:, None] - window)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_cur[..., None])
+            alpha = jnp.exp(m_prev - m_cur)
+            l_cur = alpha * l_prev + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vg.astype(jnp.float32))
+            return (acc, m_cur, l_cur), None
+
+        acc0 = jnp.zeros((b, h, q_chunk, hd), jnp.float32)
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_block, (acc0, m0, l0),
+            (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None, (jnp.arange(nq), qs))
+    # outs: [nq, b, h, qc, hd] -> [b, sq, h, hd]
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, hd)
+    return out
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                      q_chunk=1024, k_chunk=1024):
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,K,hd] -> [B,Sq,H,hd]."""
+    sq, sk = q.shape[1], k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    assert sq % q_chunk == 0 and sk % k_chunk == 0
+    return _chunked(q, k, v, causal, window, softcap, q_chunk, k_chunk)
+
+
+# ---------------------------------------------------------- TPU dispatch
+# On a TPU backend the forward runs the Pallas flash kernel; the backward
+# recomputes via the chunked XLA path (classic flash-backward memory
+# behaviour).  Off-TPU this is exactly chunked_attention.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_dispatch(q, k, v, causal, window, softcap):
+    if jax.default_backend() == "tpu":
+        from repro.kernels.flash_attention import flash_attention
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+
+
+def _flash_fwd(q, k, v, causal, window, softcap):
+    return _flash_dispatch(q, k, v, causal, window, softcap), (q, k, v)
+
+
+def _flash_bwd(causal, window, softcap, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: chunked_attention(q, k, v, causal=causal,
+                                          window=window, softcap=softcap),
+        q, k, v)
+    return vjp(g)
+
+
+_flash_dispatch.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """Public full-sequence attention entry point used by the model layers."""
+    return _flash_dispatch(q, k, v, causal, window, softcap)

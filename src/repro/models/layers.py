@@ -1,0 +1,300 @@
+"""Core neural layers: norms, rotary embeddings, GQA attention (+KV cache,
+sliding window, logit softcap), dense MLPs.
+
+Pure-functional: every layer is ``init(key, cfg) -> params`` plus
+``apply(params, x, ...) -> y``.  Params are plain dict pytrees so they stack
+cleanly under ``jax.vmap`` (superblock stacking) and shard cleanly under pjit.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+def norm_init(cfg: ArchConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm_type == "layernorm":
+        return {"w": jnp.ones((d,), _dtype(cfg)), "b": jnp.zeros((d,), _dtype(cfg))}
+    return {"w": jnp.ones((d,), _dtype(cfg))}
+
+
+def norm_apply(params, x, cfg: ArchConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * params["w"].astype(jnp.float32) + params["b"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * params["w"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    angles = angles[..., :, None, :]                   # [..., seq, 1, hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------- attention
+def attn_init(key, cfg: ArchConfig, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    return {
+        "wq": dense_init(ks[0], d, h * hd, dt),
+        "wk": dense_init(ks[1], d, kv * hd, dt),
+        "wv": dense_init(ks[2], d, kv * hd, dt),
+        "wo": dense_init(ks[3], h * hd, d, dt),
+    }
+
+
+def _softcap(logits, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(logits / cap) * cap
+    return logits
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """[B, S, K, hd] -> [B, S, K*n_rep, hd]."""
+    if n_rep == 1:
+        return x
+    b, s, k, hd = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, k, n_rep, hd)).reshape(
+        b, s, k * n_rep, hd)
+
+
+def sdpa(q, k, v, mask, *, softcap: float = 0.0, use_kernel: bool = False):
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,H,hd]; mask: [B,1,Sq,Sk] or broadcastable.
+
+    Reference (XLA) scaled-dot-product attention; the Pallas flash kernel in
+    repro.kernels is swapped in by ops-level dispatch for TPU targets.
+    """
+    hd = q.shape[-1]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    logits = _softcap(logits, softcap)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def causal_mask(sq: int, sk: int, *, window: int = 0) -> jax.Array:
+    """[1,1,sq,sk] boolean mask; assumes queries at positions sk-sq..sk-1."""
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > (qpos - window)
+    return m[None, None]
+
+
+def _flash_decode_sharded(q, k_new, v_new, kv_cache, cache_index, window,
+                          cfg, axis: str):
+    """Flash-decoding: the KV cache LENGTH dim is sharded over mesh axis
+    ``axis`` (long_500k: batch=1 leaves 'data' idle — the cache shards
+    instead).  Each device attends over its local slab; partials merge with a
+    pmax/psum logsumexp reduction.  Exact global softmax.
+
+    q: [B,1,H,hd]; k_new/v_new: [B,1,K,hd]; cache leaves [B,L_loc,K,hd].
+    """
+    didx = jax.lax.axis_index(axis)
+    ck, cv = kv_cache["k"], kv_cache["v"]
+    b, L_loc, kvh, hd = ck.shape
+    A = jax.lax.psum(1, axis)
+    L_glob = A * L_loc
+    W = min(window, L_glob) if window else L_glob
+    slot_g = cache_index % W if window else cache_index
+    owner = slot_g // L_loc
+    off = slot_g % L_loc
+    ck_w = jax.lax.dynamic_update_slice(ck, k_new.astype(ck.dtype),
+                                        (0, off, 0, 0))
+    cv_w = jax.lax.dynamic_update_slice(cv, v_new.astype(cv.dtype),
+                                        (0, off, 0, 0))
+    ck = jnp.where(didx == owner, ck_w, ck)
+    cv = jnp.where(didx == owner, cv_w, cv)
+    new_cache = {"k": ck, "v": cv}
+
+    kpos = didx * L_loc + jnp.arange(L_loc)
+    if window:
+        valid = jnp.where(cache_index >= W, kpos < W, kpos <= cache_index)
+    else:
+        valid = kpos <= cache_index
+    h = q.shape[2]
+    kk = _repeat_kv(ck, h // kvh)
+    vv = _repeat_kv(cv, h // kvh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(hd)
+    s = _softcap(s, cfg.attn_softcap)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    m_loc = jnp.max(s, axis=-1)                      # [B,H,1]
+    m_glob = jax.lax.pmax(m_loc, axis)
+    p = jnp.exp(s - m_glob[..., None])
+    l_loc = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+    l = jax.lax.psum(l_loc, axis)                    # [B,H,1]
+    acc = jax.lax.psum(acc, axis)
+    out = acc / jnp.maximum(l, 1e-20).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype), new_cache
+
+
+def attn_apply(params, x, cfg: ArchConfig, *, positions, window: int = 0,
+               kv_cache=None, cache_index=None, kv_override=None,
+               cache_axis=None):
+    """GQA attention.
+
+    Training/prefill: ``kv_cache is None`` — full-sequence causal attention.
+    Decode: ``kv_cache = {'k': [B,L,K,hd], 'v': ...}`` with write position
+    ``cache_index`` (scalar); x has seq len 1.  Returns (out, new_cache).
+    Cross-attention: ``kv_override = (k, v)`` precomputed encoder KV.
+    ``cache_axis``: mesh axis the cache LENGTH is sharded over
+    (flash-decoding; shard_map contexts only).
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    if kv_override is not None:
+        k, v = kv_override
+        q = q  # no rope in cross-attention
+    else:
+        k = (x @ params["wk"]).reshape(b, s, kv, hd)
+        v = (x @ params["wv"]).reshape(b, s, kv, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is not None and kv_override is None and cache_axis and s == 1:
+        out, new_cache = _flash_decode_sharded(
+            q, k, v, kv_cache, cache_index, window, cfg, cache_axis)
+        out = out.reshape(b, s, h * hd) @ params["wo"]
+        return out, new_cache
+
+    new_cache = None
+    if kv_cache is not None and kv_override is None:
+        # decode (s==1) or prefill-into-cache (s>1, window==0): write k,v at
+        # cache_index, attend over the cache
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        L = ck.shape[1]
+        W = min(window, L) if window else L
+        slot = cache_index % W if window else cache_index
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        kpos = jnp.arange(L)[None, :]
+        qpos = (cache_index + jnp.arange(s))[:, None]
+        if window:
+            # ring buffer (s==1 only): first W slots valid once warm
+            valid = jnp.where(cache_index >= W, kpos < W, kpos <= qpos)
+        else:
+            valid = kpos <= qpos                       # [s, L]
+        mask = valid[None, None]
+        k, v = ck, cv
+    elif kv_override is not None:
+        mask = jnp.ones((1, 1, s, k.shape[1]), dtype=bool)
+        if kv_cache is not None:
+            new_cache = kv_cache
+    else:
+        # full-sequence self-attention: flash path (never materializes S^2;
+        # Pallas kernel forward on TPU, chunked XLA otherwise)
+        from repro.models.attention import attention
+        if s >= 2048:
+            out = attention(q, k, v, causal=cfg.causal, window=window,
+                            softcap=cfg.attn_softcap)
+            out = out.reshape(b, s, h * hd) @ params["wo"]
+            return out, new_cache
+        mask = causal_mask(s, s, window=window) if cfg.causal else jnp.ones(
+            (1, 1, s, s), dtype=bool)
+
+    k = _repeat_kv(k, h // k.shape[2])
+    v = _repeat_kv(v, h // v.shape[2])
+    out = sdpa(q, k, v, mask, softcap=cfg.attn_softcap)
+    out = out.reshape(b, s, h * hd) @ params["wo"]
+    return out, new_cache
+
+
+def cross_kv(params, enc_out, cfg: ArchConfig):
+    """Precompute encoder K,V for cross-attention (cached during decode)."""
+    b, s, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    k = (enc_out @ params["wk"]).reshape(b, s, kv, hd)
+    v = (enc_out @ params["wv"]).reshape(b, s, kv, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------- mlps
+def mlp_init(key, cfg: ArchConfig, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    if cfg.mlp_type == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"wg": dense_init(k1, d, ff, dt),
+                "wu": dense_init(k2, d, ff, dt),
+                "wd": dense_init(k3, ff, d, dt)}
+    k1, k2 = jax.random.split(key, 2)
+    return {"wu": dense_init(k1, d, ff, dt), "wd": dense_init(k2, ff, d, dt)}
+
+
+def mlp_apply(params, x, cfg: ArchConfig):
+    if "wg" in params:
+        return (jax.nn.silu(x @ params["wg"]) * (x @ params["wu"])) @ params["wd"]
+    return jax.nn.gelu(x @ params["wu"]) @ params["wd"]
+
+
+# ----------------------------------------------------------------- embedding
+def embed_init(key, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"tok": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, cfg.d_model, cfg.vocab_size, dt)
+    if cfg.frontend is not None:
+        p["frontend_proj"] = dense_init(k3, cfg.frontend.d_frontend, cfg.d_model, dt)
+    return p
+
+
+def embed_apply(params, tokens, cfg: ArchConfig):
+    x = params["tok"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed_apply(params, x, cfg: ArchConfig):
+    w = params["tok"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ w.astype(x.dtype)
+    return _softcap(logits.astype(jnp.float32), cfg.final_softcap)

@@ -1,0 +1,320 @@
+"""Model facade: build_model(cfg) -> Model with init / forward / loss /
+init_cache / decode_step, plus input_specs() ShapeDtypeStruct factories for the
+AOT dry-run.  Handles decoder-only LMs, enc-dec (whisper), VLM prefix fusion,
+and the semantic-split (multi-branch) variant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return -jnp.mean(ll)
+
+
+class Model:
+    """Single-branch model (n_branches == 1)."""
+
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.n_branches == 1
+        self.cfg = cfg
+        self.enc_cfg = None
+        if cfg.is_encdec:
+            self.enc_cfg = cfg.replace(
+                causal=False, n_layers=cfg.n_enc_layers,
+                pattern=(("attn", "dense"),))
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        k_embed, k_stack, k_enc, k_norm = jax.random.split(key, 4)
+        p = {"embed": L.embed_init(k_embed, cfg),
+             "blocks": T.stack_init(k_stack, cfg, cross=cfg.is_encdec),
+             "final_norm": L.norm_init(cfg)}
+        if cfg.is_encdec:
+            p["enc_blocks"] = T.stack_init(k_enc, self.enc_cfg)
+            p["enc_norm"] = L.norm_init(cfg)
+        return p
+
+    # --------------------------------------------------------------- helpers
+    def _encode(self, params, audio_embeds):
+        """Whisper encoder over stubbed frame embeddings."""
+        cfg = self.cfg
+        x = audio_embeds @ params["embed"]["frontend_proj"]
+        pos = jnp.arange(x.shape[1])[None, :]
+        x, _, _ = T.stack_apply(params["enc_blocks"], x, self.enc_cfg,
+                                positions=pos)
+        return L.norm_apply(params["enc_norm"], x, cfg)
+
+    def _enc_kv_stack(self, params, enc_out):
+        """Precompute per-decoder-superblock cross-attention K,V."""
+        cfg = self.cfg
+
+        def per_sb(sb_params):
+            return {f"pos{i}": L.cross_kv(sb_params[f"pos{i}"]["cross"],
+                                          enc_out, cfg)
+                    for i in range(len(cfg.pattern))}
+        return jax.vmap(per_sb, in_axes=(0,))(params["blocks"])
+
+    def _prefix(self, params, batch):
+        """VLM: project stubbed patch embeddings into prefix token slots."""
+        img = batch["image_embeds"]
+        return img @ params["embed"]["frontend_proj"]
+
+    # --------------------------------------------------------------- forward
+    def hidden(self, params, batch, *, remat: bool = False,
+               window_override: Optional[int] = None):
+        """Final hidden states (pre-unembed). Returns (h [B,S,d], aux)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = L.embed_apply(params["embed"], tokens, cfg)
+        enc_kv = None
+        if cfg.is_encdec:
+            enc_out = self._encode(params, batch["audio_embeds"])
+            enc_kv = self._enc_kv_stack(params, enc_out)
+        if cfg.frontend is not None and cfg.frontend.kind == "vision":
+            prefix = self._prefix(params, batch)
+            x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+        pos = jnp.arange(x.shape[1])[None, :]
+        x, _, aux = T.stack_apply(params["blocks"], x, cfg, positions=pos,
+                                  enc_kv_stack=enc_kv, remat=remat,
+                                  window_override=window_override)
+        x = L.norm_apply(params["final_norm"], x, cfg)
+        if cfg.frontend is not None and cfg.frontend.kind == "vision":
+            x = x[:, -tokens.shape[1]:]
+        return x, aux
+
+    def chunk_logits(self, params, h):
+        """Unembed a [B, C, d] chunk of hidden states -> [B, C, vocab]."""
+        return L.unembed_apply(params["embed"], h, self.cfg)
+
+    def forward(self, params, batch, *, remat: bool = False,
+                window_override: Optional[int] = None):
+        """Full-sequence forward. Returns (logits, aux).  Materializes the
+        full [B,S,vocab] logits — smoke/small-scale only; training at scale
+        uses loss_chunked."""
+        h, aux = self.hidden(params, batch, remat=remat,
+                             window_override=window_override)
+        return self.chunk_logits(params, h), aux
+
+    def loss(self, params, batch, *, remat: bool = False):
+        logits, aux = self.forward(params, batch, remat=remat)
+        mask = batch.get("loss_mask")
+        return cross_entropy(logits, batch["labels"], mask) + 0.01 * aux
+
+    def loss_chunked(self, params, batch, *, chunk: int = 512,
+                     remat: bool = False):
+        """Cross-entropy via a seq-chunked scan over the unembedding —
+        never materializes [B,S,vocab]."""
+        h, aux = self.hidden(params, batch, remat=remat)
+        return _chunked_ce(self, params, h, batch["labels"], chunk) + 0.01 * aux
+
+    # ---------------------------------------------------------------- decode
+    def init_cache(self, batch_size: int, cache_len: int,
+                   window_override: Optional[int] = None):
+        cfg = self.cfg
+        eff_cfg = cfg if window_override is None else cfg.replace(
+            sliding_window=window_override,
+            pattern=tuple(("attn_local" if m == "attn" else m, f)
+                          for m, f in cfg.pattern))
+        dtype = jnp.dtype(cfg.dtype)
+        caches = [T.superblock_cache(eff_cfg, batch_size,
+                                     cache_len if window_override is None
+                                     else min(cache_len, window_override),
+                                     dtype)
+                  for _ in range(cfg.n_superblocks)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+    def decode_step(self, params, cache, tokens, cache_index, *,
+                    enc_kv=None, batch=None,
+                    window_override: Optional[int] = None):
+        """One-token decode.  tokens: [B, 1].  Returns (logits, new_cache)."""
+        cfg = self.cfg
+        x = L.embed_apply(params["embed"], tokens, cfg)
+        if cfg.is_encdec and enc_kv is None:
+            enc_out = self._encode(params, batch["audio_embeds"])
+            enc_kv = self._enc_kv_stack(params, enc_out)
+        pos = jnp.full((1, 1), cache_index, jnp.int32)
+        x, new_cache, _ = T.stack_apply(
+            params["blocks"], x, cfg, positions=pos, caches=cache,
+            cache_index=cache_index, enc_kv_stack=enc_kv,
+            window_override=window_override)
+        x = L.norm_apply(params["final_norm"], x, cfg)
+        logits = L.unembed_apply(params["embed"], x, cfg)
+        return logits, new_cache
+
+
+def _chunked_ce(model, params, h, labels, chunk: int) -> jax.Array:
+    """Scan CE over seq chunks of the final hidden states.
+
+    ``h``: [B,S,d] (or [Bb,B,S,d] for semantic models — model.chunk_logits
+    merges branches per chunk).  Sequence length is padded to a multiple of
+    ``chunk`` with ignored positions.
+    """
+    seq_axis = h.ndim - 2
+    s = h.shape[seq_axis]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        widths = [(0, 0)] * h.ndim
+        widths[seq_axis] = (0, pad)
+        h = jnp.pad(h, widths)
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    n = h.shape[seq_axis] // chunk
+    # [n, ..., chunk, d]
+    hs = jnp.moveaxis(
+        h.reshape(h.shape[:seq_axis] + (n, chunk) + h.shape[seq_axis + 1:]),
+        seq_axis, 0)
+    ls = jnp.moveaxis(labels.reshape(labels.shape[0], n, chunk), 1, 0)
+    valid = jnp.moveaxis(
+        (jnp.arange(n * chunk) < s).reshape(n, chunk)[None].repeat(
+            labels.shape[0], 0), 1, 0)
+
+    def body(tot, xs):
+        hc, lc, vc = xs
+        logits = model.chunk_logits(params, hc)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, lc[..., None], axis=-1)[..., 0]
+        return tot - jnp.sum(ll * vc), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls, valid))
+    return total / (labels.shape[0] * s)
+
+
+class SemanticModel:
+    """The paper's semantic split: B independent block-diagonal branches.
+
+    Branch b embeds tokens at width d/B, runs the full depth, and emits logits
+    over its vocab shard; the only cross-branch op is the final concat (on TPU:
+    one all-gather of [*, vocab/B] shards over the 'model' axis).
+    """
+
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.n_branches > 1
+        self.cfg = cfg
+        self.branch = Model(cfg.replace(n_branches=1))
+
+    @property
+    def n_branches(self):
+        return self.cfg.n_branches
+
+    def init(self, key):
+        keys = jax.random.split(key, self.n_branches)
+        return jax.vmap(self.branch.init)(keys)
+
+    def _merge_logits(self, logits):
+        # [Bb, batch, seq, vocab/Bb] -> [batch, seq, vocab]
+        bb, b, s, v = logits.shape
+        return jnp.transpose(logits, (1, 2, 0, 3)).reshape(b, s, bb * v)
+
+    def hidden(self, params, batch, *, remat: bool = False,
+               window_override: Optional[int] = None):
+        """Per-branch hidden states: [Bb, B, S, d_branch]."""
+        fwd = lambda p: self.branch.hidden(p, batch, remat=remat,
+                                           window_override=window_override)
+        h, aux = jax.vmap(fwd)(params)
+        return h, jnp.sum(aux)
+
+    def chunk_logits(self, params, h):
+        """h: [Bb, B, C, d_b] -> merged [B, C, vocab]."""
+        logits = jax.vmap(self.branch.chunk_logits)(params, h)
+        return self._merge_logits(logits)
+
+    def forward(self, params, batch, *, remat: bool = False,
+                window_override: Optional[int] = None):
+        h, aux = self.hidden(params, batch, remat=remat,
+                             window_override=window_override)
+        return self.chunk_logits(params, h), aux
+
+    def loss(self, params, batch, *, remat: bool = False):
+        logits, aux = self.forward(params, batch, remat=remat)
+        mask = batch.get("loss_mask")
+        return cross_entropy(logits, batch["labels"], mask) + 0.01 * aux
+
+    def loss_chunked(self, params, batch, *, chunk: int = 512,
+                     remat: bool = False):
+        h, aux = self.hidden(params, batch, remat=remat)
+        return _chunked_ce(self, params, h, batch["labels"], chunk) + 0.01 * aux
+
+    def init_cache(self, batch_size: int, cache_len: int,
+                   window_override: Optional[int] = None):
+        one = self.branch.init_cache(batch_size, cache_len, window_override)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.n_branches,) + x.shape).copy(),
+            one)
+
+    def decode_step(self, params, cache, tokens, cache_index, *,
+                    enc_kv=None, batch=None,
+                    window_override: Optional[int] = None):
+        step = lambda p, c: self.branch.decode_step(
+            p, c, tokens, cache_index, enc_kv=enc_kv, batch=batch,
+            window_override=window_override)
+        logits, new_cache = jax.vmap(step)(params, cache)
+        return self._merge_logits(logits), new_cache
+
+
+def build_model(cfg: ArchConfig):
+    return SemanticModel(cfg) if cfg.n_branches > 1 else Model(cfg)
+
+
+# ------------------------------------------------------------- input shapes
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, *,
+                batch_override: Optional[int] = None) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b = batch_override or shape.global_batch
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        s = shape.seq_len
+        specs = {}
+        if cfg.is_encdec:
+            # half the budget to encoder frames, half to decoder tokens
+            fe = cfg.frontend
+            specs["audio_embeds"] = sds((b, min(fe.n_tokens, s // 2),
+                                         fe.d_frontend), dt)
+            s = s // 2
+        if cfg.frontend is not None and cfg.frontend.kind == "vision":
+            fe = cfg.frontend
+            npatch = min(fe.n_tokens, s // 2)
+            specs["image_embeds"] = sds((b, npatch, fe.d_frontend), dt)
+            s = s - npatch
+        specs["tokens"] = sds((b, s), i32)
+        if shape.kind == "train":
+            specs["labels"] = sds((b, s), i32)
+        return specs
+    # decode: one new token against a cache of seq_len
+    specs = {"tokens": sds((b, 1), i32)}
+    if cfg.is_encdec:
+        fe = cfg.frontend
+        specs["audio_embeds"] = sds((b, fe.n_tokens, fe.d_frontend), dt)
+    return specs

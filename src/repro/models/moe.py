@@ -1,0 +1,154 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Dispatch is sort/scatter based (not GShard one-hot einsum) so the lowered HLO
+has FLOPs proportional to ``E * capacity * d * ff`` — i.e. the *active* expert
+compute — rather than dense all-expert compute.  The expert matmul itself maps
+onto the ``moe_gmm`` Pallas kernel on TPU (see repro/kernels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, mlp_init, mlp_apply
+
+
+def moe_init(key, cfg: ArchConfig):
+    m = cfg.moe
+    d, eff = cfg.d_model, (m.d_ff or cfg.d_ff)
+    dt = jnp.dtype(cfg.dtype)
+    kr, ke, ks = jax.random.split(key, 3)
+    expert_keys = jax.random.split(ke, m.n_experts)
+    experts = jax.vmap(lambda k: mlp_init(k, cfg, d_ff=eff))(expert_keys)
+    p = {"router": dense_init(kr, d, m.n_experts, dt), "experts": experts}
+    if m.n_shared:
+        p["shared"] = mlp_init(ks, cfg, d_ff=m.n_shared * eff)
+    return p
+
+
+def router_topk(logits: jax.Array, top_k: int):
+    """Top-k routing weights (softmax over selected logits, qwen/mixtral style)."""
+    w, idx = jax.lax.top_k(logits, top_k)            # [T, k]
+    w = jax.nn.softmax(w.astype(jnp.float32), axis=-1)
+    return w, idx
+
+
+def load_balance_loss(logits: jax.Array, idx: jax.Array, n_experts: int):
+    """Switch-style auxiliary load-balance loss."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # [T, E]
+    me = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(idx[:, 0], n_experts)                # primary expert
+    ce = jnp.mean(one_hot, axis=0)
+    return n_experts * jnp.sum(me * ce)
+
+
+def moe_apply(params, x, cfg: ArchConfig):
+    """x: [B, S, d] -> ([B, S, d], aux_loss).
+
+    With cfg.expert_parallel_axis set (pipeline runner, inside shard_map),
+    experts live sharded over that mesh axis and tokens are exchanged with a
+    pair of all-to-alls (GShard-style EP) instead of gathering expert weights.
+    """
+    if cfg.expert_parallel_axis:
+        return _moe_apply_ep(params, x, cfg)
+    return _moe_apply_dense(params, x, cfg)
+
+
+def _moe_apply_dense(params, x, cfg: ArchConfig):
+    m = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    T = b * s
+    logits = xt @ params["router"]                               # [T, E]
+    weights, idx = router_topk(logits, m.top_k)                  # [T, k]
+    aux = load_balance_loss(logits, idx, m.n_experts)
+
+    # ---- sort-based dispatch into [E, C] slots ----
+    import math as _math
+    k = m.top_k
+    cap = int(max(k, _math.ceil(T * k * m.capacity_factor / m.n_experts)))
+    flat_e = idx.reshape(T * k)                                  # [T*k]
+    flat_w = weights.reshape(T * k)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e)                                  # stable
+    se, sw, st = flat_e[order], flat_w[order], flat_tok[order]
+    # position within expert group = rank - first rank of that expert
+    first = jnp.searchsorted(se, jnp.arange(m.n_experts))        # [E]
+    pos = jnp.arange(T * k) - first[se]                          # [T*k]
+    keep = pos < cap
+    # scatter token ids / weights into [E, C] buffers; dropped tokens get an
+    # out-of-range expert index and fall out via mode="drop"
+    slot_e = jnp.where(keep, se, m.n_experts)
+    slot_p = jnp.where(keep, pos, 0)
+    buf_tok = jnp.zeros((m.n_experts, cap), dtype=jnp.int32)
+    buf_w = jnp.zeros((m.n_experts, cap), dtype=flat_w.dtype)
+    buf_tok = buf_tok.at[slot_e, slot_p].set(
+        jnp.where(keep, st, 0).astype(jnp.int32), mode="drop")
+    buf_w = buf_w.at[slot_e, slot_p].add(jnp.where(keep, sw, 0.0), mode="drop")
+
+    # ---- expert compute: grouped matmul over [E, C, d] ----
+    ex = xt[buf_tok]                                             # [E, C, d]
+    def one_expert(p, xe):
+        return mlp_apply(p, xe, cfg)
+    ey = jax.vmap(one_expert)(params["experts"], ex)             # [E, C, d]
+
+    # ---- combine back ----
+    out = jnp.zeros_like(xt)
+    out = out.at[buf_tok.reshape(-1)].add(
+        (ey * buf_w[..., None].astype(ey.dtype)).reshape(-1, d))
+    if m.n_shared:
+        out = out + mlp_apply(params["shared"], xt, cfg)
+    return out.reshape(b, s, d), aux
+
+
+def _dispatch_buffers(xt, weights, idx, m):
+    """Sort-based dispatch into [E, C] slots (shared by dense and EP paths).
+    Returns (buf_tok [E,C] int32, buf_w [E,C])."""
+    import math as _math
+    T = xt.shape[0]
+    k = m.top_k
+    cap = int(max(k, _math.ceil(T * k * m.capacity_factor / m.n_experts)))
+    flat_e = idx.reshape(T * k)
+    flat_w = weights.reshape(T * k)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e)
+    se, sw, st = flat_e[order], flat_w[order], flat_tok[order]
+    first = jnp.searchsorted(se, jnp.arange(m.n_experts))
+    pos = jnp.arange(T * k) - first[se]
+    keep = pos < cap
+    slot_e = jnp.where(keep, se, m.n_experts)
+    slot_p = jnp.where(keep, pos, 0)
+    buf_tok = jnp.zeros((m.n_experts, cap), dtype=jnp.int32)
+    buf_w = jnp.zeros((m.n_experts, cap), dtype=flat_w.dtype)
+    buf_tok = buf_tok.at[slot_e, slot_p].set(
+        jnp.where(keep, st, 0).astype(jnp.int32), mode="drop")
+    buf_w = buf_w.at[slot_e, slot_p].add(jnp.where(keep, sw, 0.0), mode="drop")
+    return buf_tok, buf_w
+
+
+def _moe_apply_ep(params, x, cfg: ArchConfig):
+    """Expert-parallel MoE: expert weights sharded [E_local, d, ff] over
+    cfg.expert_parallel_axis; two tiled all-to-alls move token buffers."""
+    m = cfg.moe
+    axis = cfg.expert_parallel_axis
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = xt @ params["router"]
+    weights, idx = router_topk(logits, m.top_k)
+    aux = load_balance_loss(logits, idx, m.n_experts)
+    buf_tok, buf_w = _dispatch_buffers(xt, weights, idx, m)
+
+    ex = xt[buf_tok]                                   # [E, C, d]
+    # exchange: every device sends expert-e rows to e's owner
+    ex = jax.lax.all_to_all(ex, axis, split_axis=0, concat_axis=1, tiled=True)
+    # ex: [E_local, A*C, d]; local expert weights: [E_local, d, ff]
+    ey = jax.vmap(lambda p, xe: mlp_apply(p, xe, cfg))(params["experts"], ex)
+    ey = jax.lax.all_to_all(ey, axis, split_axis=1, concat_axis=0, tiled=True)
+
+    out = jnp.zeros_like(xt)
+    out = out.at[buf_tok.reshape(-1)].add(
+        (ey * buf_w[..., None].astype(ey.dtype)).reshape(-1, d))
+    if m.n_shared:
+        out = out + mlp_apply(params["shared"], xt, cfg)
+    return out.reshape(b, s, d), aux

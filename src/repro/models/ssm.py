@@ -1,0 +1,129 @@
+"""Mamba-style selective state-space mixer (Jamba's SSM layers).
+
+Training/prefill uses an associative-scan linear recurrence over time
+(h_t = a_t * h_{t-1} + b_t); decode carries [B, d_inner, d_state] state.
+The chunked TPU version is the ``ssm_scan`` Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+
+
+def mamba_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    ds, dc = cfg.ssm_d_state, cfg.ssm_d_conv
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * din, dt),
+        "conv_w": (jax.random.normal(ks[1], (dc, din)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((din,), dt),
+        "x_proj": dense_init(ks[2], din, 2 * ds + 1, dt),   # -> B, C, dt
+        "dt_bias": jnp.zeros((din,), dt),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (din, ds)).copy()).astype(jnp.float32),
+        "D": jnp.ones((din,), jnp.float32),
+        "out_proj": dense_init(ks[3], din, d, dt),
+    }
+
+
+def _ssm_params(params, x, cfg: ArchConfig):
+    """x: [B, S, din] -> per-step (a, bx) for the linear recurrence, y-readout C."""
+    ds = cfg.ssm_d_state
+    proj = x @ params["x_proj"]                              # [B,S,2ds+1]
+    B_, C_, dt_raw = (proj[..., :ds], proj[..., ds:2 * ds], proj[..., -1:])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32).mean())  # [B,S,1]
+    A = -jnp.exp(params["A_log"])                            # [din, ds]
+    a = jnp.exp(dt[..., None] * A)                           # [B,S,din,ds]
+    bx = (dt[..., None] * B_[..., None, :].astype(jnp.float32)
+          * x[..., None].astype(jnp.float32))                # [B,S,din,ds]
+    return a, bx, C_.astype(jnp.float32)
+
+
+def _conv1d(params, x, cfg: ArchConfig, conv_state=None):
+    """Depthwise causal conv, kernel dc.  x: [B,S,din]."""
+    dc = cfg.ssm_d_conv
+    if conv_state is not None:                 # decode: x is [B,1,din]
+        buf = jnp.concatenate([conv_state, x], axis=1)       # [B,dc,din]
+        y = jnp.einsum("bkd,kd->bd", buf, params["conv_w"]) + params["conv_b"]
+        return jax.nn.silu(y)[:, None], buf[:, 1:]
+    pad = jnp.zeros(x.shape[:1] + (dc - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                   # [B,S+dc-1,din]
+    idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(dc)[None, :]
+    windows = xp[:, idx]                                     # [B,S,dc,din]
+    y = jnp.einsum("bskd,kd->bsd", windows, params["conv_w"]) + params["conv_b"]
+    return jax.nn.silu(y), None
+
+
+DEFAULT_SCAN_CHUNK = 512
+
+
+def mamba_chunked_scan(params, xc, cfg, *, chunk: int = DEFAULT_SCAN_CHUNK):
+    """y_t = <h_t, C_t> with h_t = a_t h_{t-1} + bx_t.
+
+    The [B,S,din,ds] gate/input tensors NEVER exist globally: the outer
+    lax.scan walks S/chunk slabs of the (cheap, [B,S,din]) conv output and
+    computes the SSM projections, the intra-chunk associative scan, and the
+    y-readout inside a checkpointed body — peak state is one [B,chunk,din,ds]
+    slab, and backward recomputes slabs instead of saving per-step states
+    (§Perf H1/H2; the Pallas ``ssm_scan`` kernel is the same blocking on TPU).
+    """
+    b, s, din = xc.shape
+    ds = cfg.ssm_d_state
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # fall back (smoke shapes)
+    n = s // chunk
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    @jax.checkpoint
+    def body(h0, xc_c):                          # xc_c: [B,chunk,din]
+        a_c, bx_c, C_c = _ssm_params(params, xc_c, cfg)
+        a_cum, h_in = jax.lax.associative_scan(combine, (a_c, bx_c), axis=1)
+        h = a_cum * h0[:, None] + h_in           # carry-in contribution
+        y_c = jnp.einsum("bsdn,bsn->bsd", h, C_c)
+        return h[:, -1], y_c
+
+    xs = jnp.moveaxis(xc.reshape(b, n, chunk, din), 1, 0)
+    h0 = jnp.zeros((b, din, ds), jnp.float32)
+    _, ys = jax.lax.scan(body, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).reshape(b, s, din)
+
+
+def mamba_apply(params, x, cfg: ArchConfig, state=None):
+    """x: [B,S,d].  state=None for train/prefill; decode state =
+    {'ssm': [B,din,ds], 'conv': [B,dc-1,din]}.  Returns (y, new_state)."""
+    b, s, d = x.shape
+    din = cfg.ssm_expand * d
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                       # [B,S,din] each
+
+    if state is None:
+        xc, _ = _conv1d(params, xin, cfg)
+        y = mamba_chunked_scan(params, xc, cfg)              # [B,S,din]
+        new_state = None
+    else:
+        xc, conv_new = _conv1d(params, xin, cfg, conv_state=state["conv"])
+        a, bx, C_ = _ssm_params(params, xc, cfg)             # S=1
+        h = a[:, 0] * state["ssm"] + bx[:, 0]                # [B,din,ds]
+        y = jnp.einsum("bdn,bn->bd", h, C_[:, 0])[:, None]   # [B,1,din]
+        new_state = {"ssm": h, "conv": conv_new}
+    y = y.astype(x.dtype) + params["D"].astype(x.dtype) * xc
+    y = y * jax.nn.silu(z)
+    return (y @ params["out_proj"]), new_state
+
+
+def mamba_init_state(cfg: ArchConfig, batch: int, dtype):
+    din = cfg.ssm_expand * cfg.d_model
+    return {"ssm": jnp.zeros((batch, din, cfg.ssm_d_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_d_conv - 1, din), dtype)}

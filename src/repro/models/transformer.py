@@ -1,0 +1,186 @@
+"""Superblock assembly: every architecture is a lax.scan over homogeneous
+"superblocks" (the repeating (mixer, ffn) pattern from its config), which keeps
+HLO size bounded for deep models and gives the layer-split pipeline a natural
+stage unit.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import xlstm as X
+
+
+# ------------------------------------------------------------------- blocks
+def block_init(key, cfg: ArchConfig, mixer: str, ffn: str, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {"mix_norm": L.norm_init(cfg)}
+    if mixer in ("attn", "attn_local"):
+        p["mix"] = L.attn_init(ks[0], cfg)
+    elif mixer == "mamba":
+        p["mix"] = S.mamba_init(ks[0], cfg)
+    elif mixer == "mlstm":
+        p["mix"] = X.mlstm_init(ks[0], cfg)
+    elif mixer == "slstm":
+        p["mix"] = X.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(mixer)
+    if cfg.post_norms:
+        p["mix_post_norm"] = L.norm_init(cfg)
+    if cross:
+        p["cross_norm"] = L.norm_init(cfg)
+        p["cross"] = L.attn_init(ks[2], cfg)
+    if ffn == "dense":
+        p["ffn_norm"] = L.norm_init(cfg)
+        p["ffn"] = L.mlp_init(ks[1], cfg)
+    elif ffn == "moe":
+        p["ffn_norm"] = L.norm_init(cfg)
+        p["ffn"] = M.moe_init(ks[1], cfg)
+    elif ffn != "none":
+        raise ValueError(ffn)
+    if cfg.post_norms and ffn != "none":
+        p["ffn_post_norm"] = L.norm_init(cfg)
+    return p
+
+
+def block_cache(cfg: ArchConfig, mixer: str, batch: int, cache_len: int, dtype):
+    """Decode-time state for one block (None entries are static)."""
+    if mixer in ("attn", "attn_local"):
+        eff = cache_len
+        if mixer == "attn_local" and cfg.sliding_window:
+            eff = min(cache_len, cfg.sliding_window)
+        return {"k": jnp.zeros((batch, eff, cfg.n_kv_heads, cfg.hd), dtype),
+                "v": jnp.zeros((batch, eff, cfg.n_kv_heads, cfg.hd), dtype)}
+    if mixer == "mamba":
+        return S.mamba_init_state(cfg, batch, dtype)
+    if mixer == "mlstm":
+        return X.mlstm_init_state(cfg, batch)
+    if mixer == "slstm":
+        return X.slstm_init_state(cfg, batch)
+    raise ValueError(mixer)
+
+
+def block_apply(params, x, cfg: ArchConfig, mixer: str, ffn: str, *,
+                positions, cache=None, cache_index=None, enc_kv=None,
+                window_override: Optional[int] = None, cache_axis=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.norm_apply(params["mix_norm"], x, cfg)
+    if mixer in ("attn", "attn_local"):
+        window = cfg.sliding_window if mixer == "attn_local" else 0
+        if window_override is not None and mixer == "attn":
+            window = window_override
+        out, new_cache = L.attn_apply(
+            params["mix"], h, cfg, positions=positions, window=window,
+            kv_cache=cache, cache_index=cache_index, cache_axis=cache_axis)
+    elif mixer == "mamba":
+        out, new_cache = S.mamba_apply(params["mix"], h, cfg, state=cache)
+    elif mixer == "mlstm":
+        out, new_cache = X.mlstm_apply(params["mix"], h, cfg, state=cache)
+    elif mixer == "slstm":
+        out, new_cache = X.slstm_apply(params["mix"], h, cfg, state=cache)
+    if cfg.post_norms:
+        out = L.norm_apply(params["mix_post_norm"], out, cfg)
+    x = x + out
+
+    if enc_kv is not None:  # cross-attention (enc-dec decoder blocks)
+        h = L.norm_apply(params["cross_norm"], x, cfg)
+        out, _ = L.attn_apply(params["cross"], h, cfg, positions=positions,
+                              kv_override=enc_kv)
+        x = x + out
+
+    if ffn != "none":
+        h = L.norm_apply(params["ffn_norm"], x, cfg)
+        if ffn == "dense":
+            out = L.mlp_apply(params["ffn"], h, cfg)
+        else:
+            out, aux = M.moe_apply(params["ffn"], h, cfg)
+        if cfg.post_norms:
+            out = L.norm_apply(params["ffn_post_norm"], out, cfg)
+        x = x + out
+    return x, new_cache, aux
+
+
+# -------------------------------------------------------------- superblocks
+def superblock_init(key, cfg: ArchConfig, cross: bool = False):
+    p = {}
+    for i, (mixer, ffn) in enumerate(cfg.pattern):
+        p[f"pos{i}"] = block_init(jax.random.fold_in(key, i), cfg, mixer, ffn,
+                                  cross=cross)
+    return p
+
+
+def superblock_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    return {f"pos{i}": block_cache(cfg, mixer, batch, cache_len, dtype)
+            for i, (mixer, _) in enumerate(cfg.pattern)}
+
+
+def superblock_apply(params, x, cfg: ArchConfig, *, positions, cache=None,
+                     cache_index=None, enc_kv=None, window_override=None,
+                     cache_axis=None):
+    """Apply one superblock; returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {} if cache is not None else None
+    for i, (mixer, ffn) in enumerate(cfg.pattern):
+        x, nc, a = block_apply(
+            params[f"pos{i}"], x, cfg, mixer, ffn, positions=positions,
+            cache=None if cache is None else cache[f"pos{i}"],
+            cache_index=cache_index,
+            enc_kv=None if enc_kv is None else enc_kv[f"pos{i}"],
+            window_override=window_override, cache_axis=cache_axis)
+        if cache is not None:
+            new_cache[f"pos{i}"] = nc
+        aux = aux + a
+    return x, new_cache, aux
+
+
+def stack_init(key, cfg: ArchConfig, cross: bool = False):
+    """Init n_superblocks stacked superblocks: every leaf gets leading dim N."""
+    keys = jax.random.split(key, cfg.n_superblocks)
+    return jax.vmap(lambda k: superblock_init(k, cfg, cross=cross))(keys)
+
+
+def stack_apply(params, x, cfg: ArchConfig, *, positions, caches=None,
+                cache_index=None, enc_kv_stack=None, window_override=None,
+                remat: bool = False):
+    """lax.scan over the stacked superblocks.
+
+    caches / enc_kv_stack (when given) are pytrees whose leaves carry a leading
+    n_superblocks dim; the per-superblock slices ride along as scan xs.
+    Returns (x, new_caches, total_aux).
+    """
+    def body(carry, xs):
+        h, aux = carry
+        sb_params, sb_cache, sb_enc = xs
+        h, nc, a = superblock_apply(
+            sb_params, h, cfg, positions=positions, cache=sb_cache,
+            cache_index=cache_index, enc_kv=sb_enc,
+            window_override=window_override)
+        return (h, aux + a), nc
+
+    if remat:
+        body = jax.checkpoint(body)
+    n = cfg.n_superblocks
+    dummy = jnp.zeros((n,))  # placeholder xs when cache/enc absent
+    xs = (params,
+          caches if caches is not None else dummy,
+          enc_kv_stack if enc_kv_stack is not None else dummy)
+
+    def body2(carry, xs):
+        sb_params, sb_cache, sb_enc = xs
+        if caches is None:
+            sb_cache = None
+        if enc_kv_stack is None:
+            sb_enc = None
+        return body(carry, (sb_params, sb_cache, sb_enc))
+
+    (x, aux), new_caches = jax.lax.scan(body2, (x, jnp.zeros((), jnp.float32)), xs)
+    if caches is None:
+        new_caches = None
+    return x, new_caches, aux

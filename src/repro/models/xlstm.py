@@ -1,0 +1,233 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory, strictly sequential scan with exponential gating).
+
+Both expose the (train/prefill, decode) interface used by the superblock
+assembler.  Training uses a lax.scan recurrence (the chunked Pallas ``ssm_scan``
+kernel is the TPU fast path for mLSTM).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+
+
+SCAN_CHUNK = 64
+
+
+def _chunked_time_scan(step, init, xs, seq_len):
+    """lax.scan over time, restructured as (outer scan over chunks) x
+    (checkpointed inner scan): backward recomputes chunk states instead of
+    saving the [S, B, H, hd, hd] recurrent-state stack (§Perf H1 — the
+    dominant memory term of the xlstm baseline)."""
+    chunk = SCAN_CHUNK if seq_len % SCAN_CHUNK == 0 else seq_len
+    n = seq_len // chunk
+
+    @jax.checkpoint
+    def outer_body(carry, xs_c):
+        return jax.lax.scan(step, carry, xs_c)
+
+    split = lambda x: x.reshape((n, chunk) + x.shape[1:])
+    xs_chunks = jax.tree.map(split, xs)
+    carry, ys = jax.lax.scan(outer_body, init, xs_chunks)
+    ys = jax.tree.map(
+        lambda y: y.reshape((seq_len,) + y.shape[2:]), ys)
+    return carry, ys
+
+
+def mlstm_chunkwise(q, k, v, i_pre, f_pre, *, chunk: int = SCAN_CHUNK):
+    """Chunkwise-PARALLEL mLSTM (§Perf H1 — the xLSTM paper's 'fully
+    parallelizable' claim realized on the MXU): within a chunk the gated
+    outer-product recurrence becomes intra-chunk masked attention ([c,c]
+    matmuls); the [hd,hd] matrix state crosses chunk boundaries only.
+    Exactly equal (up to fp association) to the recurrent _mlstm_step scan.
+
+    q,k,v: [B,S,H,hd] (q pre-scaled); i_pre,f_pre: [B,S,H].
+    Returns (state, h [B,S,H,hd])."""
+    B, S, H, hd = q.shape
+    c = chunk if S % chunk == 0 else S
+    n = S // c
+
+    def split(x):  # [B,S,H,...] -> [n,B,H,c,...]
+        x = x.reshape((B, n, c) + x.shape[2:])
+        return jnp.moveaxis(jnp.moveaxis(x, 1, 0), 3, 2)
+
+    qs, ks, vs = split(q), split(k), split(v)
+    is_ = split(i_pre)
+    F = jnp.cumsum(jax.nn.log_sigmoid(split(f_pre)), axis=-1)  # inclusive
+    tril = jnp.tril(jnp.ones((c, c), bool))
+
+    @jax.checkpoint
+    def body(carry, xs):
+        C_in, n_in, m_in = carry
+        qc, kc, vc, ic, Fc = xs                      # [B,H,c,hd] / [B,H,c]
+        Ftot = Fc[..., -1]                           # [B,H]
+        # intra-chunk gate matrix D[t,j] = F_t - F_j + i_j  (j <= t)
+        D = Fc[..., :, None] - Fc[..., None, :] + ic[..., None, :]
+        D = jnp.where(tril, D, -1e30)
+        m_intra = jnp.max(D, axis=-1)                # [B,H,c]
+        m_inter = m_in[..., None] + Fc
+        m_t = jnp.maximum(m_inter, m_intra)
+        scores = jnp.einsum("bhtd,bhjd->bhtj", qc, kc)
+        Sm = scores * jnp.exp(D - m_t[..., None])
+        inter_scale = jnp.exp(m_inter - m_t)[..., None]
+        num = jnp.einsum("bhtj,bhjd->bhtd", Sm, vc) \
+            + jnp.einsum("bhtd,bhde->bhte", qc, C_in) * inter_scale
+        nvec = jnp.einsum("bhtj,bhjd->bhtd",
+                          jnp.exp(D - m_t[..., None]), kc) \
+            + n_in[..., None, :] * inter_scale
+        den = jnp.maximum(jnp.abs(jnp.sum(qc * nvec, -1)), 1.0)
+        h = num / den[..., None]
+        # chunk-out state
+        g = Ftot[..., None] - Fc + ic                # decay-to-end per j
+        m_out = jnp.maximum(m_in + Ftot, jnp.max(g, axis=-1))
+        carry_scale = jnp.exp(m_in + Ftot - m_out)
+        w = jnp.exp(g - m_out[..., None])            # [B,H,c]
+        C_out = C_in * carry_scale[..., None, None] \
+            + jnp.einsum("bhj,bhjd,bhje->bhde", w, kc, vc)
+        n_out = n_in * carry_scale[..., None] \
+            + jnp.einsum("bhj,bhjd->bhd", w, kc)
+        return (C_out, n_out, m_out), h
+
+    init = (jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32),
+            jnp.full((B, H), -1e30, jnp.float32))
+    state, hs = jax.lax.scan(body, init, (qs, ks, vs, is_, F))
+    # hs: [n,B,H,c,hd] -> [B,S,H,hd]
+    h = jnp.moveaxis(jnp.moveaxis(hs, 2, 3), 0, 1).reshape(B, S, H, hd)
+    return state, h
+
+
+# ------------------------------------------------------------------- mLSTM
+def mlstm_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    h = cfg.n_heads
+    hd = din // h
+    # block-diagonal per-head q/k/v projections (arXiv:2405.04517 §4;
+    # also the semantic-split-friendly form — see kernels/block_diag_matmul)
+    bd = lambda k: (jax.random.normal(k, (h, hd, hd)) / (hd ** 0.5)).astype(dt)
+    return {
+        "up": dense_init(ks[0], d, 2 * din, dt),
+        "wq": bd(ks[1]),
+        "wk": bd(ks[2]),
+        "wv": bd(ks[3]),
+        "wi": dense_init(ks[4], din, h, dt),     # input gate (pre-exp)
+        "wf": dense_init(ks[5], din, h, dt),     # forget gate (pre-sigmoid)
+        "gn_w": jnp.ones((din,), dt),            # group-norm over heads
+        "down": dense_init(ks[6], din, d, dt),
+    }
+
+
+def _mlstm_step(carry, inputs, hd: int):
+    """carry: (C [B,H,hd,hd], n [B,H,hd], m [B,H]); one timestep."""
+    C, n, m = carry
+    q, k, v, i_pre, f_pre = inputs                   # q,k,v: [B,H,hd]
+    f_log = jax.nn.log_sigmoid(f_pre)                # [B,H]
+    m_new = jnp.maximum(f_log + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(f_log + m - m_new)
+    C = f_g[..., None, None] * C + i_g[..., None, None] * (
+        k[..., :, None] * v[..., None, :])           # [B,H,hd,hd]
+    n = f_g[..., None] * n + i_g[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_apply(params, x, cfg: ArchConfig, state=None):
+    b, s, d = x.shape
+    din = cfg.ssm_expand * d
+    H = cfg.n_heads
+    hd = din // H
+    u, z = jnp.split(x @ params["up"], 2, axis=-1)   # [B,S,din]
+    uh = u.reshape(b, s, H, hd)
+    q = jnp.einsum("bshd,hde->bshe", uh, params["wq"]).astype(jnp.float32) \
+        / math.sqrt(hd)
+    k = jnp.einsum("bshd,hde->bshe", uh, params["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bshd,hde->bshe", uh, params["wv"]).astype(jnp.float32)
+    i_pre = (u @ params["wi"]).astype(jnp.float32)   # [B,S,H]
+    f_pre = (u @ params["wf"]).astype(jnp.float32)
+
+    if state is None:
+        new_state, h = mlstm_chunkwise(q, k, v, i_pre, f_pre)  # [B,S,H,hd]
+    else:
+        new_state, h = _mlstm_step(state, (q[:, 0], k[:, 0], v[:, 0],
+                                           i_pre[:, 0], f_pre[:, 0]), hd)
+        h = h[:, None]
+    h = h.reshape(b, -1, din)
+    # per-head group norm
+    hf = h.reshape(b, h.shape[1], H, hd)
+    hf = hf * jax.lax.rsqrt(jnp.mean(jnp.square(hf), -1, keepdims=True) + 1e-6)
+    h = hf.reshape(b, -1, din) * params["gn_w"].astype(jnp.float32)
+    out = (h.astype(x.dtype) * jax.nn.silu(z)) @ params["down"]
+    return out, new_state
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int):
+    din = cfg.ssm_expand * cfg.d_model
+    H = cfg.n_heads
+    hd = din // H
+    return (jnp.zeros((batch, H, hd, hd), jnp.float32),
+            jnp.zeros((batch, H, hd), jnp.float32),
+            jnp.full((batch, H), -1e30, jnp.float32))
+
+
+# ------------------------------------------------------------------- sLSTM
+def slstm_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    dff = int(4 * d / 3)
+    return {
+        "wx": dense_init(ks[0], d, 4 * d, dt),       # i,f,z,o pre-activations
+        "wh": dense_init(ks[1], d, 4 * d, dt),       # recurrent
+        "ff_u": dense_init(ks[2], d, dff, dt),
+        "ff_d": dense_init(jax.random.fold_in(ks[2], 1), dff, d, dt),
+    }
+
+
+def _slstm_step(params, carry, xt, d: int):
+    """carry: (c, n, h, m) each [B, d]."""
+    c, n, h, m = carry
+    pre = xt + h @ params["wh"].astype(jnp.float32)
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    f_log = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(f_log + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(f_log + m - m_new)
+    c = f_g * c + i_g * jnp.tanh(z_pre)
+    n = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1.0)
+    return (c, n, h_new, m_new), h_new
+
+
+def slstm_apply(params, x, cfg: ArchConfig, state=None):
+    b, s, d = x.shape
+    xp = (x @ params["wx"]).astype(jnp.float32)      # [B,S,4d]
+    if state is None:
+        init = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(3)) + (
+            jnp.full((b, d), -1e30, jnp.float32),)
+        new_state, hs = _chunked_time_scan(
+            lambda c, xt: _slstm_step(params, c, xt, d),
+            init, jnp.swapaxes(xp, 0, 1), s)
+        h = jnp.swapaxes(hs, 0, 1)                   # [B,S,d]
+    else:
+        new_state, h = _slstm_step(params, state, xp[:, 0], d)
+        h = h[:, None]
+    h = h.astype(x.dtype)
+    out = jax.nn.gelu(h @ params["ff_u"]) @ params["ff_d"]
+    return out, new_state
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, jnp.full((batch, d), -1e30, jnp.float32))

@@ -1,0 +1,120 @@
+"""Asynchronous-Advantage-Actor-Critic placement scheduler (JAX).
+
+The paper combines its MAB decision layer with the A3C scheduler of
+[Tuli et al., TMC'20].  We implement a compact actor-critic: a shared MLP
+scores each host from (host state, fragment demands) features; the critic
+predicts the expected workload reward.  Updates are delayed until workload
+completion (the reward is the paper's per-workload reward) — an on-policy
+advantage update over the episode's placements.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.reward import workload_reward
+
+N_FEATURES = 6
+HIDDEN = 32
+
+
+class A3CParams(NamedTuple):
+    w1: jax.Array
+    b1: jax.Array
+    w2: jax.Array
+    b2: jax.Array
+    v1: jax.Array
+    vb1: jax.Array
+    v2: jax.Array
+    vb2: jax.Array
+
+
+def a3c_init(key) -> A3CParams:
+    k = jax.random.split(key, 4)
+    s = 0.3
+    return A3CParams(
+        jax.random.normal(k[0], (N_FEATURES, HIDDEN)) * s, jnp.zeros(HIDDEN),
+        jax.random.normal(k[1], (HIDDEN, 1)) * s, jnp.zeros(1),
+        jax.random.normal(k[2], (N_FEATURES, HIDDEN)) * s, jnp.zeros(HIDDEN),
+        jax.random.normal(k[3], (HIDDEN, 1)) * s, jnp.zeros(1),
+    )
+
+
+def policy_logits(params: A3CParams, feats: jax.Array) -> jax.Array:
+    """feats: [n_hosts, F] -> logits [n_hosts]."""
+    h = jnp.tanh(feats @ params.w1 + params.b1)
+    return (h @ params.w2 + params.b2)[:, 0]
+
+
+def value(params: A3CParams, feats: jax.Array) -> jax.Array:
+    h = jnp.tanh(feats.mean(0) @ params.v1 + params.vb1)
+    return (h @ params.v2 + params.vb2)[0]
+
+
+@jax.jit
+def a3c_update(params: A3CParams, feats, actions, masks, reward,
+               lr=1e-3, entropy_coef=1e-2):
+    """feats: [T, n_hosts, F]; actions: [T]; masks: [T, n_hosts] feasible."""
+    def loss_fn(p):
+        def per_step(f, a, m):
+            logits = jnp.where(m, policy_logits(p, f), -1e9)
+            logp = jax.nn.log_softmax(logits)
+            ent = -jnp.sum(jnp.exp(logp) * logp)
+            v = value(p, f)
+            adv = jax.lax.stop_gradient(reward - v)
+            return -(logp[a] * adv) - entropy_coef * ent + (reward - v) ** 2
+        losses = jax.vmap(per_step)(feats, actions, masks)
+        return jnp.mean(losses)
+    g = jax.grad(loss_fn)(params)
+    return jax.tree.map(lambda p, gi: p - lr * gi, params, g)
+
+
+class A3CPlacement:
+    """Stateful wrapper used by the simulator."""
+
+    def __init__(self, n_hosts: int = 10, seed: int = 0):
+        self.params = a3c_init(jax.random.PRNGKey(seed))
+        self.rng = np.random.default_rng(seed)
+        self.n_hosts = n_hosts
+        self._episodes = {}        # wid -> list of (feats, action, mask)
+        self._logits = jax.jit(policy_logits)
+
+    def _features(self, container, hosts):
+        f = np.zeros((len(hosts), N_FEATURES), np.float32)
+        for i, h in enumerate(hosts):
+            f[i] = [
+                (h.ram_mb - h.ram_used_mb) / 8192.0,
+                h.n_active / 4.0,
+                h.speed,
+                container.ram_mb / h.ram_mb,
+                container.work,
+                float(h.fits(container.ram_mb)),
+            ]
+        return f
+
+    def place(self, container, hosts):
+        feats = self._features(container, hosts)
+        mask = np.array([h.fits(container.ram_mb) for h in hosts])
+        if not mask.any():
+            return None
+        logits = np.array(self._logits(self.params, jnp.asarray(feats)))
+        logits[~mask] = -1e9
+        p = np.exp(logits - logits.max())
+        p /= p.sum()
+        a = int(self.rng.choice(len(hosts), p=p))
+        self._episodes.setdefault(container.workload.wid, []).append(
+            (feats, a, mask))
+        return a
+
+    def on_complete(self, w):
+        ep = self._episodes.pop(w.wid, None)
+        if not ep:
+            return
+        feats = jnp.asarray(np.stack([e[0] for e in ep]))
+        actions = jnp.asarray(np.array([e[1] for e in ep], np.int32))
+        masks = jnp.asarray(np.stack([e[2] for e in ep]))
+        r = float(workload_reward(w.response_time, w.sla, w.accuracy))
+        self.params = a3c_update(self.params, feats, actions, masks, r)

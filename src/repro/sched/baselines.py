@@ -1,0 +1,40 @@
+"""Placement policies (host selection) and simple decision baselines."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class RandomPlacement:
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def place(self, container, hosts):
+        fitting = [h.hid for h in hosts if h.fits(container.ram_mb)]
+        if not fitting:
+            return None
+        return int(self.rng.choice(fitting))
+
+
+class RoundRobinPlacement:
+    def __init__(self):
+        self._i = 0
+
+    def place(self, container, hosts):
+        n = len(hosts)
+        for k in range(n):
+            h = hosts[(self._i + k) % n]
+            if h.fits(container.ram_mb):
+                self._i = (self._i + k + 1) % n
+                return h.hid
+        return None
+
+
+class LeastLoadedPlacement:
+    """First-fit-decreasing on CPU load, RAM-feasible."""
+
+    def place(self, container, hosts):
+        fitting = [h for h in hosts if h.fits(container.ram_mb)]
+        if not fitting:
+            return None
+        return min(fitting, key=lambda h: (h.n_active, -h.ram_mb
+                                           + h.ram_used_mb)).hid

@@ -1,0 +1,61 @@
+"""GOBI-style gradient-based placement (Tuli et al., COSCO TPDS'21 — the
+paper's reference [9]).
+
+A differentiable surrogate scores a soft placement: estimated response time
+(queue depth / speed) + energy + RAM-pressure penalty; a few gradient steps
+on host logits pick the placement.  JAX end-to-end — the co-simulation
+surrogate is literally jax.grad-descended, matching COSCO's
+"co-simulation + gradient optimization" recipe at small scale.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _surrogate(logits, feats, work, ram_frac):
+    """Soft placement score (lower = better).
+
+    feats columns: [load (n_active/4), 1/speed, ram_free_frac, fits].
+    """
+    p = jax.nn.softmax(logits)
+    load, inv_speed, ram_free, fits = (feats[:, 0], feats[:, 1],
+                                       feats[:, 2], feats[:, 3])
+    # expected response: work x (1 + load) / speed on the chosen host
+    resp = jnp.sum(p * work * (1.0 + load) * inv_speed)
+    energy = jnp.sum(p * (1.0 + load))          # utilization proxy
+    ram_pen = jnp.sum(p * jnp.maximum(ram_frac - ram_free, 0.0)) * 10.0
+    infeasible = jnp.sum(p * (1.0 - fits)) * 100.0
+    return resp + 0.1 * energy + ram_pen + infeasible
+
+
+_grad = jax.jit(jax.grad(_surrogate))
+
+
+class GOBIPlacement:
+    def __init__(self, n_steps: int = 10, lr: float = 1.0, seed: int = 0):
+        self.n_steps = n_steps
+        self.lr = lr
+        self.rng = np.random.default_rng(seed)
+
+    def place(self, container, hosts):
+        fits = np.array([h.fits(container.ram_mb) for h in hosts])
+        if not fits.any():
+            return None
+        feats = np.zeros((len(hosts), 4), np.float32)
+        for i, h in enumerate(hosts):
+            feats[i] = [h.n_active / 4.0, 1.0 / h.speed,
+                        (h.ram_mb - h.ram_used_mb) / h.ram_mb, float(fits[i])]
+        logits = jnp.zeros((len(hosts),))
+        feats_j = jnp.asarray(feats)
+        work = jnp.asarray(container.work, jnp.float32)
+        ram_frac = jnp.asarray(container.ram_mb / 8192.0, jnp.float32)
+        for _ in range(self.n_steps):
+            g = _grad(logits, feats_j, work, ram_frac)
+            logits = logits - self.lr * g
+        order = np.argsort(-np.asarray(logits))
+        for h in order:
+            if fits[h]:
+                return int(h)
+        return None

@@ -1,0 +1,80 @@
+"""Full schedulers = split-decision policy + placement policy.
+
+``SplitPlaceScheduler``     — the paper: MAB decision engine + any placement.
+``CompressionScheduler``    — the paper's baseline: model compression
+                              (no split) + the same placement policy.
+``FixedDecisionScheduler``  — ablation: always layer / always semantic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_workloads import WORKLOADS
+from repro.core.decision import SplitDecisionEngine
+from repro.sim.simulator import COMPRESSED, LAYER, SEMANTIC
+from repro.sim.workloads import APPS
+
+
+class _PlacementMixin:
+    def place(self, container, hosts):
+        return self.placement.place(container, hosts)
+
+    def _notify_placement(self, w):
+        if hasattr(self.placement, "on_complete"):
+            self.placement.on_complete(w)
+
+
+class SplitPlaceScheduler(_PlacementMixin):
+    def __init__(self, placement, *, bandit: str = "ucb", seed: int = 0,
+                 n_ctx: int = 6, **bandit_kw):
+        self.placement = placement
+        if bandit == "ucb":
+            bandit_kw.setdefault("c", 0.3)
+        # E_a warm start from the published per-app latency profiles
+        ema0 = [WORKLOADS[a].base_latency_s * 1.2 for a in APPS]
+        self.engine = SplitDecisionEngine(len(APPS), bandit=bandit,
+                                          n_ctx=n_ctx, ema_init_values=ema0,
+                                          **bandit_kw)
+        self.state = self.engine.init(jax.random.PRNGKey(seed))
+        self._decide = jax.jit(self.engine.decide)
+        self._observe = jax.jit(self.engine.observe)
+
+    def decide(self, w):
+        arm, ctx, self.state = self._decide(
+            self.state, jnp.asarray(w.app_id), jnp.asarray(w.sla))
+        w.ctx = ctx
+        return int(arm)
+
+    def observe(self, w):
+        self.state = self._observe(
+            self.state, jnp.asarray(w.app_id), w.ctx,
+            jnp.asarray(w.decision), jnp.asarray(w.response_time),
+            jnp.asarray(w.sla), jnp.asarray(w.accuracy))
+        self._notify_placement(w)
+
+
+class CompressionScheduler(_PlacementMixin):
+    """Paper baseline: low-memory compressed models, no splitting."""
+
+    def __init__(self, placement):
+        self.placement = placement
+
+    def decide(self, w):
+        return COMPRESSED
+
+    def observe(self, w):
+        self._notify_placement(w)
+
+
+class FixedDecisionScheduler(_PlacementMixin):
+    def __init__(self, placement, decision: int):
+        self.placement = placement
+        self.decision = decision
+
+    def decide(self, w):
+        return self.decision
+
+    def observe(self, w):
+        self._notify_placement(w)

@@ -1,0 +1,135 @@
+"""Batched request server with MAB-driven split decisions — the paper's
+serving story at pod scale (DESIGN.md §4).
+
+Requests (prompt + SLA deadline + app class) arrive in batches.  The
+SplitDecisionEngine picks {layer -> pipeline, semantic} per request class,
+the request is routed to the corresponding pre-built executable, and the
+observed latency/accuracy-proxy feeds back into the MAB — the serving analogue
+of the edge simulator, running real JAX model steps.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import mab
+from repro.core.decision import SplitDecisionEngine
+from repro.dist import api as A
+
+
+@dataclass
+class Request:
+    rid: int
+    app_id: int
+    tokens: np.ndarray            # [prompt_len]
+    sla_s: float
+    max_new: int = 8
+    decision: Optional[int] = None
+    latency_s: float = 0.0
+    output: Optional[np.ndarray] = None
+
+
+@dataclass
+class ServeStats:
+    served: int = 0
+    violations: int = 0
+    per_mode: Dict[str, int] = field(default_factory=dict)
+    rewards: List[float] = field(default_factory=list)
+
+
+class SplitPlaceServer:
+    """Holds one executable per split mode and routes via the MAB engine."""
+
+    # accuracy proxies for the reward: layer split = full model quality,
+    # semantic = block-diagonal model (paper: lower)
+    ACC = {mab.LAYER: 0.93, mab.SEMANTIC: 0.89}
+
+    def __init__(self, cfg: ArchConfig, mesh, *, n_apps: int = 3,
+                 bandit: str = "ucb", cache_len: int = 128, seed: int = 0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.cache_len = cache_len
+        self.engine = SplitDecisionEngine(n_apps, bandit=bandit, c=0.3)
+        self.state = self.engine.init(jax.random.PRNGKey(seed))
+        self.stats = ServeStats()
+        self.runners = {
+            mab.LAYER: A.build_runner(cfg, "pipeline", mesh),
+            mab.SEMANTIC: A.build_runner(cfg, "semantic", mesh),
+        }
+        self.params = {}
+        self.decode_fns = {}
+        key = jax.random.PRNGKey(1)
+        for arm, runner in self.runners.items():
+            self.params[arm] = runner.init(key)
+            self.decode_fns[arm] = jax.jit(
+                lambda p, c, b, i, r=runner: r.serve_step(p, c, b, i))
+        self._decide = jax.jit(self.engine.decide)
+        self._observe = jax.jit(self.engine.observe)
+
+    def _generate(self, arm: int, batch_tokens: np.ndarray, max_new: int):
+        runner = self.runners[arm]
+        b, prompt_len = batch_tokens.shape
+        cache = runner.init_cache(b, self.cache_len)
+        # prefill token-by-token (teacher-forced), then decode max_new tokens
+        tok = jnp.asarray(batch_tokens[:, :1])
+        out = []
+        for i in range(prompt_len + max_new - 1):
+            logits, cache = self.decode_fns[arm](
+                self.params[arm], cache, {"tokens": tok}, i)
+            nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            if i + 1 < prompt_len:
+                tok = jnp.asarray(batch_tokens[:, i + 1:i + 2])
+            else:
+                tok = nxt
+                out.append(np.asarray(nxt))
+        return np.concatenate(out, axis=1) if out else np.zeros((b, 0), np.int32)
+
+    def serve_batch(self, requests: List[Request]) -> List[Request]:
+        """Group requests by MAB decision, run each group batched."""
+        groups: Dict[int, List[Request]] = {}
+        for r in requests:
+            arm, ctx, self.state = self._decide(
+                self.state, jnp.asarray(r.app_id), jnp.asarray(r.sla_s))
+            r.decision = int(arm)
+            r._ctx = ctx
+            groups.setdefault(r.decision, []).append(r)
+
+        for arm, reqs in groups.items():
+            plen = max(len(r.tokens) for r in reqs)
+            toks = np.zeros((len(reqs), plen), np.int32)
+            for i, r in enumerate(reqs):
+                toks[i, :len(r.tokens)] = r.tokens
+            t0 = time.perf_counter()
+            out = self._generate(arm, toks, max(r.max_new for r in reqs))
+            dt = time.perf_counter() - t0
+            per_req = dt  # batch latency == per-request wall latency
+            for r in reqs:
+                r.latency_s = per_req
+                r.output = out[:len(reqs)]
+                acc = self.ACC[arm]
+                self.state = self._observe(
+                    self.state, jnp.asarray(r.app_id), r._ctx,
+                    jnp.asarray(arm), jnp.asarray(per_req),
+                    jnp.asarray(r.sla_s), jnp.asarray(acc))
+                self.stats.served += 1
+                self.stats.violations += int(per_req > r.sla_s)
+                self.stats.rewards.append(
+                    (float(per_req <= r.sla_s) + acc) / 2)
+                name = "pipeline" if arm == mab.LAYER else "semantic"
+                self.stats.per_mode[name] = self.stats.per_mode.get(name, 0) + 1
+        return requests
+
+    def summary(self) -> dict:
+        s = self.stats
+        return {
+            "served": s.served,
+            "violation_rate": round(s.violations / max(s.served, 1), 3),
+            "mean_reward": round(float(np.mean(s.rewards)), 4) if s.rewards else 0,
+            "per_mode": s.per_mode,
+        }

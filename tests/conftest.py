@@ -1,0 +1,14 @@
+import os
+
+# Tests that need a multi-device mesh live in test_dist.py, which re-execs
+# with forced host devices.  Everything else sees the single real CPU device
+# (per the dry-run contract: only dryrun.py forces 512).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

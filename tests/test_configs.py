@@ -1,0 +1,89 @@
+"""Assigned-architecture configs: exact dims, reductions, semantic variants."""
+import pytest
+
+from repro.configs.base import ASSIGNED, get_config, list_configs
+
+EXPECTED = {
+    # name: (L, d_model, H, kv, d_ff, vocab)
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+    "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+    "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    "whisper-base": (6, 512, 8, 8, 2048, 51872),      # vocab padded 51865->51872
+    "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+    "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+    "internvl2-26b": (48, 6144, 48, 8, 16384, 92560),  # vocab padded 92553->92560
+    "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+}
+
+MOE = {
+    "phi3.5-moe-42b-a6.6b": (16, 2),
+    "qwen2-moe-a2.7b": (60, 4),
+    "jamba-1.5-large-398b": (16, 2),
+}
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_exact_dims(name):
+    cfg = get_config(name)
+    L, d, h, kv, ff, v = EXPECTED[name]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    if name in MOE:
+        assert (cfg.moe.n_experts, cfg.moe.top_k) == MOE[name]
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_reduced_constraints(name):
+    r = get_config(name).reduced()
+    assert r.n_superblocks <= 2
+    assert r.d_model <= 512
+    if r.moe is not None:
+        assert r.moe.n_experts <= 4
+    assert r.n_layers % len(r.pattern) == 0
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+@pytest.mark.parametrize("b", [4, 16])
+def test_semantic_variant(name, b):
+    cfg = get_config(name)
+    sem = cfg.semantic(b)
+    assert sem.n_branches == b
+    # total width is preserved up to padding
+    assert sem.d_model * b >= cfg.d_model
+    assert sem.vocab_size * b >= cfg.vocab_size
+    assert sem.n_heads >= 1 and sem.n_kv_heads >= 1
+    if cfg.moe is not None:
+        assert sem.moe.n_experts >= 1
+        assert sem.moe.top_k <= sem.moe.n_experts
+    # SplitNet parameter reduction: block-diagonal model is smaller
+    assert sem.param_count() < cfg.param_count()
+
+
+def test_param_counts_sane():
+    # within 40% of the published totals (analytic count, exact arch details
+    # like biases/partial-rope differ)
+    expect = {"yi-34b": 34e9, "gemma2-27b": 27e9, "starcoder2-15b": 15e9,
+              "stablelm-1.6b": 1.6e9, "phi3.5-moe-42b-a6.6b": 42e9,
+              "jamba-1.5-large-398b": 398e9, "whisper-base": 74e6,
+              "xlstm-125m": 125e6}
+    for name, n in expect.items():
+        got = get_config(name).param_count()
+        assert 0.6 * n < got < 1.5 * n, (name, got, n)
+
+
+def test_active_params_moe():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    active = cfg.active_param_count()
+    assert active < cfg.param_count() * 0.35  # 6.6B of 42B
+
+
+def test_registry_lists_all():
+    names = list_configs()
+    for a in ASSIGNED:
+        assert a in names

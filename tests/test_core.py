@@ -1,0 +1,123 @@
+"""MAB decision engine, estimators, reward, splitter — unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.core import mab
+from repro.core.decision import SplitDecisionEngine
+from repro.core.estimator import ema_get, ema_init, ema_update
+from repro.core.reward import batch_reward, workload_reward
+from repro.core.splitter import (fragments_for, layer_fragments,
+                                 mode_for_decision, semantic_fragments)
+
+
+# ------------------------------------------------------------------- reward
+def test_reward_formula_matches_paper():
+    # R = [1(rt<=sla) + acc] / 2
+    assert float(workload_reward(1.0, 2.0, 0.9)) == pytest.approx(0.95)
+    assert float(workload_reward(3.0, 2.0, 0.9)) == pytest.approx(0.45)
+
+
+@settings(max_examples=50, deadline=None)
+@given(rt=st.floats(0, 100), sla=st.floats(0.01, 100), acc=st.floats(0, 1))
+def test_reward_bounds(rt, sla, acc):
+    r = float(workload_reward(rt, sla, acc))
+    assert 0.0 <= r <= 1.0
+    # accuracy monotonicity
+    assert float(workload_reward(rt, sla, min(acc + 0.1, 1.0))) >= r - 1e-6
+
+
+def test_batch_reward_mean():
+    r = batch_reward([1.0, 3.0], [2.0, 2.0], [0.9, 0.9])
+    assert float(r) == pytest.approx((0.95 + 0.45) / 2)
+
+
+# ---------------------------------------------------------------- estimator
+def test_ema_snap_then_blend():
+    st_ = ema_init(2, init_value=5.0, decay=0.5)
+    st_ = ema_update(st_, 0, 2.0)          # first obs snaps
+    assert float(ema_get(st_, 0)) == pytest.approx(2.0)
+    st_ = ema_update(st_, 0, 4.0)
+    assert float(ema_get(st_, 0)) == pytest.approx(3.0)
+    assert float(ema_get(st_, 1)) == pytest.approx(5.0)  # untouched
+
+
+# --------------------------------------------------------------------- MABs
+@pytest.mark.parametrize("bandit", ["ucb", "thompson", "egreedy"])
+def test_bandit_learns_better_arm(bandit):
+    init, select, update = mab.BANDITS[bandit]
+    state = init(1)
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(0)
+    for i in range(300):
+        key, sub = jax.random.split(key)
+        arm = int(select(state, 0, sub))
+        r = 0.9 if arm == 1 else 0.4
+        r += 0.05 * rng.standard_normal()
+        state = update(state, 0, arm, jnp.clip(r, 0, 1))
+    picks = []
+    for i in range(50):
+        key, sub = jax.random.split(key)
+        picks.append(int(select(state, 0, sub)))
+    assert np.mean(picks) > 0.7, f"{bandit} failed to favor arm 1"
+
+
+def test_context_bucket_monotone():
+    buckets = [int(mab.context_bucket(jnp.asarray(r), 8))
+               for r in [0.1, 0.3, 0.7, 1.0, 1.5, 3.0, 10.0]]
+    assert buckets == sorted(buckets)
+    assert buckets[0] >= 0 and buckets[-1] <= 7
+
+
+def test_engine_tight_sla_prefers_semantic():
+    eng = SplitDecisionEngine(n_apps=1, bandit="ucb", c=0.3,
+                              ema_init_values=[2.0])
+    state = eng.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    for _ in range(250):
+        tight = rng.random() < 0.5
+        sla = 0.9 if tight else 4.0
+        arm, ctx, state = eng.decide(state, jnp.asarray(0), jnp.asarray(sla))
+        rt = 2.0 if int(arm) == mab.LAYER else 0.7
+        acc = 0.93 if int(arm) == mab.LAYER else 0.89
+        state = eng.observe(state, jnp.asarray(0), ctx, arm,
+                            jnp.asarray(rt), jnp.asarray(sla), jnp.asarray(acc))
+    picks = []
+    for _ in range(40):
+        arm, ctx, state = eng.decide(state, jnp.asarray(0), jnp.asarray(0.9))
+        picks.append(int(arm))
+        state = eng.observe(state, jnp.asarray(0), ctx, arm,
+                            jnp.asarray(0.7 if picks[-1] else 2.0),
+                            jnp.asarray(0.9),
+                            jnp.asarray(0.89 if picks[-1] else 0.93))
+    assert np.mean(picks) > 0.8  # tight deadline -> semantic
+
+
+def test_engine_ema_tracks_layer_only():
+    eng = SplitDecisionEngine(n_apps=1, bandit="ucb")
+    state = eng.init(jax.random.PRNGKey(0))
+    state = eng.observe(state, jnp.asarray(0), jnp.asarray(0),
+                        jnp.asarray(mab.SEMANTIC), jnp.asarray(0.5),
+                        jnp.asarray(1.0), jnp.asarray(0.9))
+    assert float(ema_get(state.ema, 0)) == pytest.approx(1.0)  # unchanged
+    state = eng.observe(state, jnp.asarray(0), jnp.asarray(0),
+                        jnp.asarray(mab.LAYER), jnp.asarray(2.5),
+                        jnp.asarray(1.0), jnp.asarray(0.9))
+    assert float(ema_get(state.ema, 0)) == pytest.approx(2.5)  # snapped
+
+
+# ----------------------------------------------------------------- splitter
+def test_fragments():
+    cfg = get_config("stablelm-1.6b")
+    lf = layer_fragments(cfg, 4)
+    assert len(lf) == 4
+    assert lf[0].predecessors == () and lf[2].predecessors == (1,)
+    sf = semantic_fragments(cfg, 4)
+    assert all(f.predecessors == () for f in sf)
+    # SplitNet: semantic fragments are smaller in total
+    assert sum(f.param_bytes for f in sf) < sum(f.param_bytes for f in lf)
+    assert mode_for_decision(mab.LAYER) == "pipeline"
+    assert mode_for_decision(mab.SEMANTIC) == "semantic"

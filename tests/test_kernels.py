@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode,
+plus hypothesis property tests on the scan recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.block_diag_matmul import block_diag_matmul
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.ssm_scan import ssm_scan
+
+RNG = np.random.default_rng(0)
+
+
+def arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sq,sk,h,kh,hd", [
+    (128, 128, 4, 4, 64),      # MHA
+    (256, 256, 8, 2, 64),      # GQA 4:1
+    (128, 256, 4, 1, 128),     # MQA, sk > sq
+])
+def test_flash_attention_shapes(sq, sk, h, kh, hd, dtype):
+    q = arr((2, sq, h, hd), dtype)
+    k = arr((2, sk, kh, hd), dtype)
+    v = arr((2, sk, kh, hd), dtype)
+    out = flash_attention(q, k, v, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=float(TOL[dtype]), rtol=0.05)
+
+
+@pytest.mark.parametrize("window,softcap,causal", [
+    (64, 0.0, True), (0, 30.0, True), (0, 0.0, False), (32, 50.0, True)])
+def test_flash_attention_variants(window, softcap, causal):
+    q = arr((1, 256, 4, 64))
+    k = arr((1, 256, 2, 64))
+    v = arr((1, 256, 2, 64))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                  softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bb,t,d,e", [(4, 128, 128, 128), (16, 128, 64, 256),
+                                      (2, 256, 384, 128)])
+def test_block_diag_matmul(bb, t, d, e, dtype):
+    x = arr((bb, t, d), dtype, 0.3)
+    w = arr((bb, d, e), dtype, 0.3)
+    out = block_diag_matmul(x, w, block_d=64, interpret=True)
+    exp = ref.block_diag_matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=float(TOL[dtype]) * d, rtol=0.05)
+
+
+def test_block_diag_equals_dense_embedding():
+    x = arr((4, 64, 64))
+    w = arr((4, 64, 32))
+    out = block_diag_matmul(x, w, block_t=64, block_e=32, block_d=64,
+                            interpret=True)
+    exp = ref.block_diag_dense_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4)
+
+
+@pytest.mark.parametrize("e,c,d,f", [(4, 128, 128, 128), (8, 128, 256, 64)])
+def test_moe_gmm(e, c, d, f):
+    x = arr((e, c, d), scale=0.3)
+    w = arr((e, d, f), scale=0.3)
+    out = moe_gmm(x, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.moe_gmm_ref(x, w)),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("s,chunk", [(128, 32), (64, 64), (256, 16)])
+def test_ssm_scan(s, chunk):
+    a = jnp.asarray(RNG.uniform(0.7, 0.999, (2, s, 16, 8)), jnp.float32)
+    b = arr((2, s, 16, 8))
+    out = ssm_scan(a, b, chunk=chunk, interpret=True)
+    exp = ref.ssm_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("L,lens", [(512, (3, 512)), (256, (256, 17))])
+def test_decode_attention(L, lens):
+    q = arr((2, 8, 64))
+    k = arr((2, L, 2, 64))
+    v = arr((2, L, 2, 64))
+    length = jnp.asarray(lens, jnp.int32)
+    out = decode_attention(q, k, v, length, interpret=True)
+    exp = ref.decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5,
+                               rtol=1e-3)
+
+
+# ----------------------------------------------------------- property tests
+@settings(max_examples=20, deadline=None)
+@given(s=st.sampled_from([32, 64, 128]),
+       d=st.sampled_from([4, 8]),
+       seed=st.integers(0, 1000))
+def test_ssm_scan_property(s, d, seed):
+    """Linear recurrence invariants: a=0 -> h=b; a=1 -> h=cumsum(b)."""
+    rng = np.random.default_rng(seed)
+    b = jnp.asarray(rng.normal(size=(1, s, d, 4)), jnp.float32)
+    h0 = ssm_scan(jnp.zeros_like(b), b, chunk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(h0), np.asarray(b), atol=1e-6)
+    h1 = ssm_scan(jnp.ones_like(b), b, chunk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(jnp.cumsum(b, 1)),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(scale=st.floats(0.1, 3.0), seed=st.integers(0, 1000))
+def test_flash_attention_softmax_property(scale, seed):
+    """Rows of implied attention are convex combos: out within [min v, max v]."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 128, 2, 32)) * scale, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 128, 2, 32)) * scale, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.float32)
+    out = np.asarray(flash_attention(q, k, v, interpret=True))
+    assert np.isfinite(out).all()
+    assert out.max() <= float(v.max()) + 1e-5
+    assert out.min() >= float(v.min()) - 1e-5

@@ -1,0 +1,34 @@
+"""End-to-end: training driver descends; SplitPlace server routes + learns."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.serving.server import Request, SplitPlaceServer
+
+
+@pytest.mark.slow
+def test_train_driver_descends():
+    from repro.launch.train import main
+    losses = main(["--arch", "stablelm-1.6b", "--reduced", "--steps", "30",
+                   "--seq-len", "64", "--batch", "4", "--mesh", "1,1",
+                   "--lr", "3e-3", "--log-every", "29"])
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+@pytest.mark.slow
+def test_splitplace_server_routes():
+    cfg = get_config("stablelm-1.6b").reduced()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    server = SplitPlaceServer(cfg, mesh, cache_len=32, seed=0)
+    rng = np.random.default_rng(0)
+    for b in range(6):
+        reqs = [Request(rid=b * 4 + i, app_id=int(rng.integers(3)),
+                        tokens=rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                        sla_s=float(rng.uniform(0.05, 5.0)), max_new=2)
+                for i in range(4)]
+        server.serve_batch(reqs)
+    s = server.summary()
+    assert s["served"] == 24
+    assert set(s["per_mode"]) <= {"pipeline", "semantic"}
+    assert 0 <= s["mean_reward"] <= 1

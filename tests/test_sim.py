@@ -1,0 +1,73 @@
+"""Edge simulator invariants + Table-I qualitative reproduction."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sched.a3c import A3CPlacement
+from repro.sched.baselines import (LeastLoadedPlacement, RandomPlacement,
+                                   RoundRobinPlacement)
+from repro.sched.policies import (CompressionScheduler,
+                                  FixedDecisionScheduler, SplitPlaceScheduler)
+from repro.sim.simulator import LAYER, SEMANTIC, Simulator, build_containers
+from repro.sim.workloads import Workload
+
+
+def test_container_dags():
+    w = Workload(0, "resnet50v2", 0, 0.0, 2.0)
+    layer = build_containers(w, LAYER, iter(range(100)).__next__)
+    assert len(layer) == 4
+    assert layer[0].deps == () and layer[3].deps == (2,)
+    w2 = Workload(1, "resnet50v2", 0, 0.0, 2.0)
+    sem = build_containers(w2, SEMANTIC, iter(range(100)).__next__)
+    assert all(c.deps == () for c in sem)
+    assert w.accuracy > w2.accuracy  # layer keeps full accuracy
+
+
+@pytest.mark.parametrize("placement", [RandomPlacement(), RoundRobinPlacement(),
+                                       LeastLoadedPlacement()])
+def test_sim_invariants(placement):
+    sim = Simulator(FixedDecisionScheduler(placement, SEMANTIC), seed=0)
+    for _ in range(400):
+        sim.step()
+        for h in sim.hosts:
+            assert h.ram_used_mb <= h.ram_mb + 1e-6
+            assert h.ram_used_mb >= -1e-6
+    m = sim.metrics()
+    assert m["completed"] > 50
+    assert m["energy_wh"] > 0
+    rts = [w.response_time for w in sim.completed]
+    assert all(rt > 0 for rt in rts)
+
+
+def test_semantic_faster_than_layer():
+    kw = dict(seed=3, rate=0.3)
+    m_l = Simulator(FixedDecisionScheduler(LeastLoadedPlacement(), LAYER),
+                    **kw).run(1500)
+    m_s = Simulator(FixedDecisionScheduler(LeastLoadedPlacement(), SEMANTIC),
+                    **kw).run(1500)
+    assert m_s["mean_response_s"] < m_l["mean_response_s"]
+    assert m_s["accuracy"] < m_l["accuracy"]  # paper §III-A trade-off
+
+
+@pytest.mark.slow
+def test_table1_qualitative():
+    """Paper Table I: SplitPlace beats the compression baseline on SLA
+    violations, accuracy, and reward."""
+    base = Simulator(CompressionScheduler(A3CPlacement()), seed=1).run(2500)
+    sp = Simulator(SplitPlaceScheduler(A3CPlacement(), bandit="ucb"),
+                   seed=1).run(2500)
+    assert sp["sla_violation"] < base["sla_violation"] * 0.7
+    assert sp["accuracy"] > base["accuracy"]
+    assert sp["reward"] > base["reward"]
+    assert sp["energy_wh"] <= base["energy_wh"] * 1.05
+
+
+def test_a3c_update_improves_or_runs():
+    """A3C placement learns without NaNs and keeps placing feasibly."""
+    sim = Simulator(SplitPlaceScheduler(A3CPlacement(), bandit="thompson"),
+                    seed=2)
+    m = sim.run(600)
+    assert m["completed"] > 30
+    import jax.numpy as jnp
+    for leaf in sim.scheduler.placement.params:
+        assert bool(jnp.isfinite(leaf).all())
