@@ -1,0 +1,23 @@
+"""repro.dist — sharded execution of the paper's two split strategies.
+
+The SplitPlace decision layer (repro.core) picks, per workload, between a
+*layer-wise* split (sequential fragments -> the ``"pipeline"`` runner) and a
+*semantic* split (independent block-diagonal fragments -> the ``"semantic"``
+runner); ``"fsdp"`` is the unsplit data-parallel baseline.  This package turns
+those decisions into executables over a jax device mesh:
+
+- :mod:`repro.dist.api` — ``build_runner(cfg, mode, mesh)`` plus the
+  train/serve step factories consumed by ``launch/`` and ``serving/``.
+- :mod:`repro.dist.sharding` — PartitionSpec recipes over the
+  ``repro.models`` param / cache / batch pytrees.
+- :mod:`repro.dist.pipeline` — GPipe-style microbatched execution for the
+  layer-split mode (loss is invariant to the microbatch count).
+"""
+from repro.dist.api import (  # noqa: F401
+    batch_specs,
+    build_runner,
+    make_opt_specs,
+    make_serve_step,
+    make_train_step,
+    pod_shard_opt_specs,
+)

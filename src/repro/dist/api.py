@@ -1,0 +1,190 @@
+"""Runner API: one executable surface per split mode.
+
+``build_runner(cfg, mode, mesh)`` returns a runner for one of
+
+- ``"fsdp"``      unsplit baseline: the full model, ZeRO-3 param layout.
+- ``"semantic"``  the paper's SEMANTIC split: B independent block-diagonal
+                  branches (``cfg.semantic(B)``), branch dim on 'model'.
+- ``"pipeline"``  the paper's LAYER split: the superblock stack sharded as
+                  pipeline stages over 'model', microbatched loss
+                  (repro.dist.pipeline).
+
+Every runner exposes the same surface — ``init``, ``loss``, ``prefill_step``,
+``init_cache``, ``serve_step``, ``param_specs``, ``cache_specs`` — so the
+launch stack (launch/train.py, launch/dryrun.py, launch/serve.py) and the
+MAB-routed SplitPlaceServer (serving/server.py) treat split decisions as a
+pure routing choice.  Module-level factories (``make_train_step``,
+``make_serve_step``) close over a runner and stay jit-friendly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.dist import pipeline as PL
+from repro.dist import sharding as SH
+from repro.dist.sharding import (  # noqa: F401  (public API re-exports)
+    batch_specs,
+    make_opt_specs,
+    pod_shard_opt_specs,
+)
+from repro.models.model import build_model
+from repro.optim.adamw import adamw_update
+
+MODES = ("fsdp", "semantic", "pipeline")
+
+
+class BaseRunner:
+    """Shared runner plumbing; subclasses fix the layout + loss schedule."""
+
+    mode: str = ""
+    #: leading cache dim (superblock stack / branch) placed on 'model'
+    _cache_model_leading = False
+
+    def __init__(self, cfg: ArchConfig, mesh, *, shard_cache_len: bool = False,
+                 zero_data: bool = True):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.model = build_model(cfg)
+        self.shard_cache_len = shard_cache_len
+        self.zero_data = zero_data
+
+    # ------------------------------------------------------------ lifecycle
+    def init(self, key):
+        return self.model.init(key)
+
+    def loss(self, params, batch, *, remat: bool = False):
+        return self.model.loss_chunked(params, batch, remat=remat)
+
+    # -------------------------------------------------------------- serving
+    def prefill_step(self, params, batch):
+        """Full-prompt forward; returns [B, S, vocab] logits."""
+        logits, _ = self.model.forward(params, batch)
+        return logits
+
+    def init_cache(self, batch_size: int, cache_len: int,
+                   window_override: Optional[int] = None):
+        return self.model.init_cache(batch_size, cache_len, window_override)
+
+    def serve_step(self, params, cache, batch, cache_index, *,
+                   window_override: Optional[int] = None):
+        """One-token decode; returns ([B, vocab] logits, new_cache)."""
+        logits, new_cache = self.model.decode_step(
+            params, cache, batch["tokens"], cache_index, batch=batch,
+            window_override=window_override)
+        return logits[:, -1], new_cache
+
+    # -------------------------------------------------------------- layouts
+    def param_specs(self, params):
+        raise NotImplementedError
+
+    def cache_specs(self, cache):
+        return SH.cache_specs(cache, self.mesh,
+                              shard_cache_len=self.shard_cache_len,
+                              model_leading=self._cache_model_leading)
+
+
+class FSDPRunner(BaseRunner):
+    mode = "fsdp"
+
+    def param_specs(self, params):
+        return SH.fsdp_param_specs(params, self.mesh,
+                                   zero_data=self.zero_data)
+
+
+class SemanticRunner(BaseRunner):
+    """SEMANTIC split: B branches of width d/B run independently (the only
+    cross-branch op is the final vocab-shard concat), so model-axis devices
+    host whole branches — the paper's parallel semantic fragments."""
+
+    mode = "semantic"
+    _cache_model_leading = True
+
+    def __init__(self, cfg: ArchConfig, mesh, *, n_branches: Optional[int] = None,
+                 **kw):
+        n_b = n_branches or max(2, dict(mesh.shape).get("model", 1))
+        super().__init__(cfg.semantic(n_b), mesh, **kw)
+        self.base_cfg = cfg
+
+    def param_specs(self, params):
+        return SH.semantic_param_specs(params, self.mesh,
+                                       zero_data=self.zero_data)
+
+
+class PipelineRunner(BaseRunner):
+    """LAYER split: stage-sharded superblock stack + microbatched loss."""
+
+    mode = "pipeline"
+    _cache_model_leading = True
+
+    def __init__(self, cfg: ArchConfig, mesh, *,
+                 n_microbatches: Optional[int] = None,
+                 expert_parallel: bool = False, **kw):
+        super().__init__(cfg, mesh, **kw)
+        self.n_microbatches = n_microbatches
+        self.expert_parallel = expert_parallel
+        self.n_stages = dict(mesh.shape).get("model", 1)
+
+    def loss(self, params, batch, *, remat: bool = False):
+        b = batch["tokens"].shape[0]
+        m = PL.resolve_microbatches(b, self.n_microbatches, self.n_stages)
+        return PL.microbatch_loss(self.model, params, batch, m, remat=remat)
+
+    def param_specs(self, params):
+        return SH.pipeline_param_specs(params, self.mesh,
+                                       zero_data=self.zero_data,
+                                       expert_parallel=self.expert_parallel)
+
+
+def build_runner(cfg: ArchConfig, mode: str, mesh, *,
+                 n_microbatches: Optional[int] = None,
+                 shard_cache_len: bool = False,
+                 expert_parallel: bool = False,
+                 zero_data: bool = True,
+                 n_branches: Optional[int] = None):
+    """Construct the runner for one split mode.
+
+    ``n_microbatches``    pipeline only; default = mesh 'model' size.
+    ``shard_cache_len``   flash-decoding layout: KV cache length on 'data'.
+    ``expert_parallel``   pipeline MoE: expert dim on 'model' (layout-level
+                          EP; the shard_map all-to-all path is a ROADMAP item).
+    ``zero_data``         ZeRO-style param sharding over 'data' (on by default).
+    ``n_branches``        semantic only; default = max(2, mesh 'model' size).
+    """
+    common = dict(shard_cache_len=shard_cache_len, zero_data=zero_data)
+    if mode == "fsdp":
+        return FSDPRunner(cfg, mesh, **common)
+    if mode == "semantic":
+        return SemanticRunner(cfg, mesh, n_branches=n_branches, **common)
+    if mode == "pipeline":
+        return PipelineRunner(cfg, mesh, n_microbatches=n_microbatches,
+                              expert_parallel=expert_parallel, **common)
+    raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+
+
+# ------------------------------------------------------------ step factories
+def make_train_step(runner, *, lr: float = 3e-4, remat: bool = False,
+                    weight_decay: float = 0.1, clip_norm: float = 1.0):
+    """(params, opt, batch) -> (params, opt, loss) — grad + AdamW update."""
+
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: runner.loss(p, batch, remat=remat))(params)
+        params, opt = adamw_update(grads, opt, params, lr=lr,
+                                   weight_decay=weight_decay,
+                                   clip_norm=clip_norm)
+        return params, opt, loss
+
+    return step
+
+
+def make_serve_step(runner, *, window_override: Optional[int] = None):
+    """(params, cache, batch, cache_index) -> (logits, new_cache)."""
+
+    def step(params, cache, batch, cache_index):
+        return runner.serve_step(params, cache, batch, cache_index,
+                                 window_override=window_override)
+
+    return step

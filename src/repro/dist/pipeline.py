@@ -1,0 +1,70 @@
+"""GPipe-style microbatched execution for the paper's LAYER split.
+
+The layer-wise split places a sequential chain of model fragments across
+hosts; here the fragment unit is the superblock stack that
+``repro.models.transformer`` already scans over.  ``pipeline_param_specs``
+(sharding.py) puts the stacked-superblock dim on the mesh 'model' axis, so
+each model-axis slice owns a contiguous span of stages, and this module
+streams M microbatches through the stack with an outer ``lax.scan``:
+
+    for m in microbatches:          # outer scan (this module)
+        for stage in superblocks:   # inner scan (models.transformer)
+            h = stage(h)
+
+Under ``jax.grad`` the outer scan transposes into per-microbatch gradient
+accumulation, so peak activation memory scales with B/M instead of B.
+
+Numerics contract (tests/test_perf_paths.py, scripts/smoke_dist.py):
+the per-token mean loss over equal-sized microbatches equals the full-batch
+loss, so dense-model loss is invariant to ``n_microbatches`` and matches the
+fsdp runner to float-reduction noise.  MoE capacity dispatch happens per
+microbatch, so token dropping differs from global dispatch — parity there is
+approximate by design (tolerance documented at the call sites).
+
+A true 1F1B schedule with explicit stage-to-stage collective permutes (and
+the shard_map expert-parallel all-to-all path) is an open ROADMAP item; at
+this PR's scale GSPMD's stage-sharded scan is the placement mechanism.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def resolve_microbatches(batch_size: int, requested, n_stages: int) -> int:
+    """Pick the microbatch count.  An explicit request must divide the batch;
+    the default is the stage count (mesh 'model' size) clamped to a divisor
+    of the batch so the schedule always tiles exactly."""
+    if requested is not None:
+        if batch_size % requested:
+            raise ValueError(
+                f"n_microbatches={requested} does not divide batch "
+                f"size {batch_size}")
+        return requested
+    return math.gcd(batch_size, max(n_stages, 1)) or 1
+
+
+def split_microbatches(batch, n_micro: int):
+    """[B, ...] leaves -> [M, B/M, ...] (leading scan axis)."""
+    def split(x):
+        b = x.shape[0]
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def microbatch_loss(model, params, batch, n_micro: int, *,
+                    remat: bool = False, chunk: int = 512):
+    """Mean per-token loss over M microbatches (gradient accumulation under
+    grad).  M=1 degenerates to the plain full-batch loss."""
+    if n_micro <= 1:
+        return model.loss_chunked(params, batch, chunk=chunk, remat=remat)
+    mbs = split_microbatches(batch, n_micro)
+
+    def body(total, mb):
+        loss = model.loss_chunked(params, mb, chunk=chunk, remat=remat)
+        return total + loss, None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), mbs)
+    return total / n_micro

@@ -1,0 +1,207 @@
+"""PartitionSpec recipes over the repro.models pytrees.
+
+Everything here is layout only — specs never change numerics, they tell
+GSPMD where params, optimizer state, caches and batches live on the mesh
+(axes ``data`` x ``model``, optionally a leading ``pod``):
+
+- ``fsdp_param_specs``      ZeRO-3 style: largest divisible dim over 'data',
+                            a second dim over 'model' (tensor sharding).
+- ``semantic_param_specs``  the paper's semantic split: the leading branch
+                            dim always lives on 'model' — each model-axis
+                            slice owns whole independent branches.
+- ``pipeline_param_specs``  the paper's layer split: the stacked-superblock
+                            dim of the block params lives on 'model' — each
+                            model-axis slice owns a contiguous span of
+                            pipeline stages.
+
+Specs only ever shard dims that divide evenly by the assigned axis size, so
+``device_put`` / ``jit`` shardings are always valid.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey
+
+from repro.optim.adamw import AdamWState
+
+
+def _axis_sizes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _pick_dim(shape, axis_size: int, taken) -> int:
+    """Largest dim divisible by axis_size and not already assigned (-1: none)."""
+    best, best_size = -1, 0
+    for i, s in enumerate(shape):
+        if i in taken or s < axis_size or s % axis_size:
+            continue
+        if s > best_size:
+            best, best_size = i, s
+    return best
+
+
+def _greedy_spec(shape, sizes: dict, axes, fixed: Optional[dict] = None) -> P:
+    """Assign each mesh axis in ``axes`` (in order) to a distinct divisible
+    dim of ``shape``; ``fixed`` pins dims to axes up front."""
+    entries = [None] * len(shape)
+    taken = set()
+    if fixed:
+        for d, ax in fixed.items():
+            if d < len(shape):
+                entries[d] = ax
+                taken.add(d)
+    for ax in axes:
+        if sizes.get(ax, 1) <= 1 or ax in entries:
+            continue
+        d = _pick_dim(shape, sizes[ax], taken)
+        if d >= 0:
+            entries[d] = ax
+            taken.add(d)
+    return P(*entries)
+
+
+def _path_has(path, *names) -> bool:
+    return any(isinstance(k, DictKey) and k.key in names for k in path)
+
+
+def _leaf_key(path) -> str:
+    for k in reversed(path):
+        if isinstance(k, DictKey):
+            return k.key
+    return ""
+
+
+# ------------------------------------------------------------- param specs
+def fsdp_param_specs(params, mesh, *, zero_data: bool = True):
+    """ZeRO-3 layout: per leaf, largest divisible dim sharded over 'data'
+    (optimizer/param state fully sharded), second dim over 'model'."""
+    sizes = _axis_sizes(mesh)
+    axes = (["data"] if zero_data else []) + ["model"]
+    return jax.tree.map(
+        lambda leaf: _greedy_spec(tuple(leaf.shape), sizes, axes), params)
+
+
+def semantic_param_specs(params, mesh, *, zero_data: bool = True):
+    """Semantic-split layout: every leaf of a SemanticModel carries a leading
+    branch dim — it is always placed on 'model' (branches are independent,
+    so model-axis devices never communicate until the final logit concat).
+    Remaining dims get ZeRO-style 'data' sharding."""
+    sizes = _axis_sizes(mesh)
+    axes = ["data"] if zero_data else []
+    return jax.tree.map(
+        lambda leaf: _greedy_spec(tuple(leaf.shape), sizes, axes,
+                                  fixed={0: "model"}),
+        params)
+
+
+def pipeline_param_specs(params, mesh, *, zero_data: bool = True,
+                         expert_parallel: bool = False):
+    """Layer-split layout: block params are stacked [n_superblocks, ...] —
+    the stack dim goes on 'model' (each model-axis slice owns a contiguous
+    span of pipeline stages); embed / norms fall back to the fsdp recipe.
+    With ``expert_parallel`` the per-expert dim of MoE expert weights takes
+    'model' instead (experts sharded across the axis, GShard-style)."""
+    sizes = _axis_sizes(mesh)
+    axes = ["data"] if zero_data else []
+    n_model = sizes.get("model", 1)
+
+    def spec(path, leaf):
+        shape = tuple(leaf.shape)
+        if not _path_has(path, "blocks", "enc_blocks"):
+            return _greedy_spec(shape, sizes, axes + ["model"])
+        fixed = {}
+        if expert_parallel and _path_has(path, "experts") and len(shape) >= 3 \
+                and n_model > 1 and shape[1] % n_model == 0:
+            fixed[1] = "model"           # [n_sb, n_experts, ...]
+        elif n_model > 1 and shape and shape[0] % n_model == 0:
+            fixed[0] = "model"           # stage (stacked superblock) dim
+        return _greedy_spec(shape, sizes, axes, fixed=fixed)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+# ------------------------------------------------------------- cache specs
+def cache_specs(cache, mesh, *, shard_cache_len: bool = False,
+                model_leading: bool = False):
+    """Decode-cache layout.  Attention k/v leaves are [..., B, L, K, hd]:
+    the batch dim is sharded over 'data' when it divides, or — with
+    ``shard_cache_len`` (flash-decoding, long_500k where batch=1 leaves
+    'data' idle) — the cache LENGTH dim shards over 'data' instead.
+    ``model_leading`` places the leading stack/branch dim on 'model'
+    (pipeline stage span / semantic branch ownership).  Recurrent state
+    (mamba/xlstm) stays replicated."""
+    sizes = _axis_sizes(mesh)
+    n_data, n_model = sizes.get("data", 1), sizes.get("model", 1)
+
+    def spec(path, leaf):
+        shape = tuple(leaf.shape)
+        entries = [None] * len(shape)
+        if model_leading and shape and n_model > 1 and shape[0] % n_model == 0:
+            entries[0] = "model"
+        if _leaf_key(path) in ("k", "v") and len(shape) >= 4 and n_data > 1:
+            b_dim, l_dim = len(shape) - 4, len(shape) - 3
+            if shard_cache_len:
+                if shape[l_dim] % n_data == 0 and entries[l_dim] is None:
+                    entries[l_dim] = "data"
+            elif shape[b_dim] % n_data == 0 and entries[b_dim] is None:
+                entries[b_dim] = "data"
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+# ------------------------------------------------------------- batch specs
+def batch_specs(cfg, mesh, batch):
+    """Data-parallel batch layout: leading (batch) dim over 'data' whenever
+    it divides; everything else (and scalars) replicated."""
+    del cfg  # uniform across architectures; kept for API symmetry
+    n_data = _axis_sizes(mesh).get("data", 1)
+
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        if shape and n_data > 1 and shape[0] % n_data == 0:
+            return P("data")
+        return P()
+
+    return jax.tree.map(spec, batch)
+
+
+# --------------------------------------------------------- optimizer specs
+def make_opt_specs(p_specs) -> AdamWState:
+    """AdamW state mirrors the param layout; the step counter is replicated."""
+    return AdamWState(step=P(), m=p_specs, v=p_specs)
+
+
+def pod_shard_opt_specs(o_specs: AdamWState, params_shape, mesh) -> AdamWState:
+    """Additionally spread optimizer moments over the 'pod' axis (multi-pod
+    dry-runs of >100B models): a data-sharded dim upgrades to ('pod','data')
+    when it divides, otherwise the largest free dim takes 'pod'."""
+    sizes = _axis_sizes(mesh)
+    n_pod = sizes.get("pod", 1)
+    if n_pod <= 1:
+        return o_specs
+    n_data = sizes.get("data", 1)
+
+    def upgrade(spec, leaf):
+        shape = tuple(leaf.shape)
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        for d, (e, s) in enumerate(zip(entries, shape)):
+            if e == "data" and s % (n_pod * n_data) == 0:
+                entries[d] = ("pod", "data")
+                return P(*entries)
+        d = _pick_dim(shape, n_pod,
+                      {i for i, e in enumerate(entries) if e is not None})
+        if d >= 0:
+            entries[d] = "pod"
+        return P(*entries)
+
+    new_m = jax.tree.map(upgrade, o_specs.m, params_shape, is_leaf=_is_spec)
+    new_v = jax.tree.map(upgrade, o_specs.v, params_shape, is_leaf=_is_spec)
+    return AdamWState(step=o_specs.step, m=new_m, v=new_v)

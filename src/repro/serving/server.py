@@ -109,9 +109,9 @@ class SplitPlaceServer:
             out = self._generate(arm, toks, max(r.max_new for r in reqs))
             dt = time.perf_counter() - t0
             per_req = dt  # batch latency == per-request wall latency
-            for r in reqs:
+            for i, r in enumerate(reqs):
                 r.latency_s = per_req
-                r.output = out[:len(reqs)]
+                r.output = out[i]
                 acc = self.ACC[arm]
                 self.state = self._observe(
                     self.state, jnp.asarray(r.app_id), r._ctx,

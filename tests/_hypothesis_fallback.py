@@ -1,0 +1,87 @@
+"""Minimal deterministic stand-in for the ``hypothesis`` library.
+
+The real ``hypothesis`` is the declared test dependency (see
+``pyproject.toml``) and is preferred whenever it is importable; this module
+exists only for offline environments where it cannot be installed.
+``tests/conftest.py`` registers it under the ``hypothesis`` name when the
+import fails.
+
+It implements exactly the surface this test-suite uses:
+
+- ``@given(**kwargs)`` with keyword strategies,
+- ``@settings(max_examples=..., deadline=...)`` stacked above ``@given``,
+- ``strategies.integers / floats / sampled_from / booleans``.
+
+Draws are plain seeded RNG samples (no shrinking, no edge-case schedule);
+the seed derives from the test's qualified name so failures reproduce.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-fallback"
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_for(self, rng):
+        return self._draw(rng)
+
+
+class strategies:  # mirrors the ``hypothesis.strategies`` module surface
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elems = list(elements)
+        return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_hyp_max_examples", DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                kw = {k: s.example_for(rng) for k, s in strats.items()}
+                try:
+                    fn(**kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example: {fn.__name__}({kw!r})") from e
+        # NOTE: deliberately no functools.wraps — a __wrapped__ attribute
+        # would make pytest introspect the original signature and demand
+        # fixtures named after the strategy kwargs.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper._hyp_max_examples = getattr(fn, "_hyp_max_examples",
+                                            DEFAULT_MAX_EXAMPLES)
+        return wrapper
+    return deco

@@ -5,6 +5,22 @@ import os
 # (per the dry-run contract: only dryrun.py forces 512).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+try:
+    import hypothesis  # noqa: F401  — real dependency, preferred when present
+except ModuleNotFoundError:
+    # Offline container: register the vendored deterministic fallback
+    # (tests/_hypothesis_fallback.py) under the ``hypothesis`` name.
+    import importlib.util
+    import pathlib
+    import sys
+
+    _path = pathlib.Path(__file__).with_name("_hypothesis_fallback.py")
+    _spec = importlib.util.spec_from_file_location("hypothesis", _path)
+    _mod = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _mod
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis.strategies"] = _mod.strategies
+
 import numpy as np
 import pytest
 
@@ -12,3 +28,19 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    """Shrunken stablelm for fast in-process dist/serving tests."""
+    from repro.configs.base import get_config
+    return get_config("stablelm-1.6b").reduced().replace(
+        d_model=64, n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+        vocab_size=128)
+
+
+@pytest.fixture(scope="session")
+def tiny_mesh():
+    """1x1 mesh on the single CPU device."""
+    import jax
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -4,7 +4,38 @@ import numpy as np
 import pytest
 
 from repro.configs.base import get_config
+from repro.core import mab
 from repro.serving.server import Request, SplitPlaceServer
+
+
+def test_server_layer_and_semantic_roundtrip(tiny_cfg, tiny_mesh):
+    """Both split arms serve requests: decisions happen before observations,
+    so an untried context gives every request of the first batch LAYER (UCB
+    scores untried arms inf, argmax breaks ties low); the next batch in the
+    same context bucket gets SEMANTIC, and each observation updates the
+    reward state."""
+    server = SplitPlaceServer(tiny_cfg, tiny_mesh, cache_len=16, seed=0)
+    # sla >> any exec time keeps the SLA/E_a context in the top bucket, so
+    # every batch hits the same bandit cell deterministically
+    make_req = lambda rid: Request(
+        rid=rid, app_id=0, tokens=np.array([1, 2, 3], np.int32),
+        sla_s=1000.0, max_new=2)
+    r0, r1 = server.serve_batch([make_req(0), make_req(1)])
+    (r2,) = server.serve_batch([make_req(2)])
+    assert r0.decision == r1.decision == mab.LAYER
+    assert r2.decision == mab.SEMANTIC
+    for r in (r0, r1, r2):
+        assert r.output is not None and np.isfinite(r.output).all()
+        assert r.output.shape == (2,)         # each request gets its own row
+        assert r.latency_s > 0
+    s = server.summary()
+    assert s["served"] == 3
+    assert set(s["per_mode"]) == {"pipeline", "semantic"}
+    assert 0 <= s["mean_reward"] <= 1
+    # reward state updated: every observation landed in the bandit
+    counts = np.asarray(server.state.bandit.counts)  # [n_apps, n_ctx, 2]
+    assert counts.sum() == 3
+    assert counts[0].sum(axis=0).tolist() == [2.0, 1.0]
 
 
 @pytest.mark.slow
