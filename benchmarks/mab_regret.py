@@ -1,8 +1,10 @@
 """Cumulative-regret comparison of the decision bandits vs an SLA oracle.
 
-The oracle picks layer iff the (known) layer latency fits the deadline —
-the best fixed-per-context policy.  Regret = oracle reward - bandit reward,
-accumulated over a workload stream.
+The bandits run behind the unified ``repro.engine`` ``Policy`` protocol
+(``MABPolicy.decide`` / ``observe`` over ``Request``/``Outcome``) — the same
+surface both execution backends drive.  The oracle picks layer iff the
+(known) layer latency fits the deadline — the best fixed-per-context policy.
+Regret = oracle reward - bandit reward, accumulated over a workload stream.
 
     PYTHONPATH=src python benchmarks/mab_regret.py [--n 2000]
 """
@@ -18,36 +20,34 @@ import numpy as np
 REPO = pathlib.Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(REPO / "src"))
 
-import jax                                                      # noqa: E402
-import jax.numpy as jnp                                         # noqa: E402
-from repro.core.decision import SplitDecisionEngine             # noqa: E402
-from repro.core.reward import workload_reward                   # noqa: E402
+from repro.engine import (LAYER, MABPolicy, Outcome, Request,   # noqa: E402
+                          accuracy_for, reward_for)
 
 LAYER_T, SEM_T = 2.0, 0.7
-ACC = {0: 0.93, 1: 0.89}
+APP = 0                                     # resnet50v2-class accuracies
+ACC = {arm: accuracy_for(APP, arm) for arm in (0, 1)}
 
 
 def run(bandit: str, n: int, seed: int = 0, **kw):
-    eng = SplitDecisionEngine(1, bandit=bandit, ema_init_values=[LAYER_T],
-                              **kw)
-    st = eng.init(jax.random.PRNGKey(seed))
-    dec = jax.jit(eng.decide)
-    obs = jax.jit(eng.observe)
+    policy = MABPolicy(n_apps=1, bandit=bandit, ema_init_values=[LAYER_T],
+                       seed=seed, n_ctx=8, **kw)
     rng = np.random.default_rng(seed)
     regret = 0.0
     curve = []
     for i in range(n):
         sla = float(rng.uniform(0.5, 4.0))
-        arm, ctx, st = dec(st, jnp.asarray(0), jnp.asarray(sla))
-        a = int(arm)
-        rt = (LAYER_T if a == 0 else SEM_T) * (1 + 0.1 * abs(rng.standard_normal()))
-        r = float(workload_reward(rt, sla, ACC[a]))
-        st = obs(st, jnp.asarray(0), ctx, arm, jnp.asarray(rt),
-                 jnp.asarray(sla), jnp.asarray(ACC[a]))
+        req = Request(rid=i, app_id=0, sla_s=sla)
+        a = policy.decide(req)
+        req.decision = a
+        rt = (LAYER_T if a == LAYER else SEM_T) \
+            * (1 + 0.1 * abs(rng.standard_normal()))
+        policy.observe(Outcome(request=req, decision=a, latency_s=rt,
+                               queue_wait_s=0.0, accuracy=ACC[a],
+                               finish_s=rt))
+        r = reward_for(rt, sla, ACC[a])
         # oracle: layer iff expected layer latency fits (maximizes reward)
         o = 0 if LAYER_T * 1.08 <= sla else 1
-        ro = float(workload_reward(
-            (LAYER_T if o == 0 else SEM_T) * 1.08, sla, ACC[o]))
+        ro = reward_for((LAYER_T if o == 0 else SEM_T) * 1.08, sla, ACC[o])
         regret += max(ro - r, 0.0)
         if (i + 1) % (n // 20) == 0:
             curve.append(round(regret, 2))
@@ -68,6 +68,7 @@ def main():
         print(f"{bandit:10s} total regret {regret:8.2f}  "
               f"tail regret/step {out[bandit]['per_step_tail']:.4f}")
     path = REPO / "experiments" / "mab_regret.json"
+    path.parent.mkdir(exist_ok=True)
     path.write_text(json.dumps(out, indent=1))
     print(f"-> {path}")
 

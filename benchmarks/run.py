@@ -33,18 +33,19 @@ def emit(name: str, us_per_call: float, derived):
 
 # ------------------------------------------------------------------ Table I
 def table1(quick: bool = False):
-    from repro.sim.simulator import Simulator
+    from repro.engine import (CompressionPolicy, MABPolicy, PlacementEngine,
+                              PoissonSource)
+    from repro.engine.sim_backend import SimBackend
     from repro.sched.a3c import A3CPlacement
-    from repro.sched.policies import (CompressionScheduler,
-                                      SplitPlaceScheduler)
     n = 600 if quick else 3000
     for name, mk in [
-        ("table1_baseline", lambda: CompressionScheduler(A3CPlacement())),
+        ("table1_baseline", lambda: CompressionPolicy(A3CPlacement())),
         ("table1_splitplace",
-         lambda: SplitPlaceScheduler(A3CPlacement(), bandit="ucb")),
+         lambda: MABPolicy(bandit="ucb", placement=A3CPlacement())),
     ]:
         t0 = time.perf_counter()
-        m = Simulator(mk(), seed=1).run(n)
+        eng = PlacementEngine(mk(), SimBackend(seed=1))
+        m = eng.run(PoissonSource(rate=0.6, seed=3, sla_range=(0.5, 3.0)), n)
         dt_us = (time.perf_counter() - t0) * 1e6 / n
         emit(f"{name}_reward", dt_us, m["reward"])
         emit(f"{name}_sla_violation", dt_us, m["sla_violation"])

@@ -1,42 +1,56 @@
-"""End-to-end reproduction of the paper's evaluation (Table I).
+"""End-to-end reproduction of the paper's evaluation (Table I) on the
+unified placement engine.
 
-10 RPi-class hosts, Gaussian network noise, Poisson arrivals of
-ResNet50V2/MobileNetV2/InceptionV3 jobs with SLA deadlines.  Compares the
-compression baseline against SplitPlace (MAB + A3C) and the two fixed-arm
-ablations.
+Poisson (or trace-driven) arrivals of ResNet50V2/MobileNetV2/InceptionV3
+jobs with SLA deadlines run against the vectorized ``SimBackend`` — the
+paper's 10 RPi-class hosts by default, thousands with ``--hosts``.  Compares
+the compression baseline against SplitPlace (MAB + A3C) and the two
+fixed-arm ablations; every policy is a ``repro.engine`` Policy and would run
+unchanged against the real-serving ``JaxBackend``.
 
     PYTHONPATH=src python examples/edge_simulation.py [--intervals 3000]
+    PYTHONPATH=src python examples/edge_simulation.py \
+        --hosts 1000 --rate 60 --intervals 300     # scale-out run
 """
 import argparse
-import json
 
+from repro.engine import (LAYER, SEMANTIC, CompressionPolicy, FixedPolicy,
+                          MABPolicy, PlacementEngine, PoissonSource)
+from repro.engine.sim_backend import SimBackend
 from repro.sched.a3c import A3CPlacement
-from repro.sched.policies import (CompressionScheduler,
-                                  FixedDecisionScheduler, SplitPlaceScheduler)
-from repro.sim.simulator import LAYER, SEMANTIC, Simulator
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--intervals", type=int, default=3000)
+    ap.add_argument("--hosts", type=int, default=10)
+    ap.add_argument("--rate", type=float, default=0.6,
+                    help="mean arrivals per interval")
     ap.add_argument("--seed", type=int, default=1)
     args = ap.parse_args()
 
     policies = [
         ("baseline (compression+A3C)",
-         lambda: CompressionScheduler(A3CPlacement())),
+         lambda: CompressionPolicy(A3CPlacement(n_hosts=args.hosts))),
         ("SplitPlace (UCB MAB+A3C)",
-         lambda: SplitPlaceScheduler(A3CPlacement(), bandit="ucb")),
+         lambda: MABPolicy(bandit="ucb",
+                           placement=A3CPlacement(n_hosts=args.hosts))),
         ("SplitPlace (Thompson)",
-         lambda: SplitPlaceScheduler(A3CPlacement(), bandit="thompson")),
-        ("always-layer", lambda: FixedDecisionScheduler(A3CPlacement(), LAYER)),
+         lambda: MABPolicy(bandit="thompson",
+                           placement=A3CPlacement(n_hosts=args.hosts))),
+        ("always-layer",
+         lambda: FixedPolicy(LAYER, A3CPlacement(n_hosts=args.hosts))),
         ("always-semantic",
-         lambda: FixedDecisionScheduler(A3CPlacement(), SEMANTIC)),
+         lambda: FixedPolicy(SEMANTIC, A3CPlacement(n_hosts=args.hosts))),
     ]
     print(f"{'policy':30s} {'reward':>7s} {'SLAviol':>8s} {'acc':>6s} "
           f"{'energy':>7s} {'resp_s':>7s} {'sem%':>5s}")
     for name, mk in policies:
-        m = Simulator(mk(), seed=args.seed).run(args.intervals)
+        backend = SimBackend(n_hosts=args.hosts, seed=args.seed)
+        source = PoissonSource(rate=args.rate, seed=args.seed + 2,
+                               sla_range=(0.5, 3.0))
+        eng = PlacementEngine(mk(), backend)
+        m = eng.run(source, args.intervals)
         print(f"{name:30s} {m['reward']:7.4f} {m['sla_violation']:8.4f} "
               f"{m['accuracy']:6.4f} {m['energy_wh']:7.2f} "
               f"{m['mean_response_s']:7.3f} "

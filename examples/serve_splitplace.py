@@ -1,7 +1,9 @@
-"""Serve a (reduced) assigned model with MAB-driven split decisions — the
-paper's placement policy driving REAL JAX executables: layer-split requests
-run the GPipe pipeline runner, semantic-split requests run the block-diagonal
-branch model; observed latencies feed the bandit.
+"""Serve a (reduced) model through the unified placement engine — the
+paper's MAB policy driving REAL JAX executables via ``repro.engine``:
+layer-split requests run the GPipe pipeline runner, semantic-split requests
+run the block-diagonal branch model.  The JaxBackend forms deadline-ordered
+(EDF) batches and prefills each batch's prompts in a SINGLE batched step (no
+token-by-token prompt loop); observed latencies feed the bandit.
 
     PYTHONPATH=src python examples/serve_splitplace.py --arch stablelm-1.6b
 """
@@ -11,7 +13,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.serving.server import Request, SplitPlaceServer
+from repro.engine import JaxBackend, MABPolicy, PlacementEngine, Request
 
 
 def main():
@@ -19,11 +21,14 @@ def main():
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--batches", type=int, default=8)
     ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    server = SplitPlaceServer(cfg, mesh, cache_len=64, seed=0)
+    policy = MABPolicy(bandit="ucb", seed=0, ema_init_values=None, n_ctx=8)
+    backend = JaxBackend(cfg, mesh, cache_len=64, max_batch=args.max_batch)
+    eng = PlacementEngine(policy, backend)
     rng = np.random.default_rng(0)
 
     rid = 0
@@ -36,11 +41,15 @@ def main():
                 tokens=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
                 sla_s=float(0.05 if tight else 5.0), max_new=4))
             rid += 1
-        server.serve_batch(reqs)
-        decided = {("pipeline" if r.decision == 0 else "semantic"): 1
-                   for r in reqs}
+        eng.submit(reqs)        # admit -> MAB decide -> per-arm EDF queues
+        eng.drain()
         print(f"batch {b}: {[f'{r.rid}:{r.decision}' for r in reqs]}")
-    print("summary:", server.summary())
+    s = eng.summary()
+    print("summary:", s)
+    assert s["prefill_calls"] == s["batches"], \
+        "every batch must prefill in exactly one step"
+    print(f"batched prefill: {s['prefill_calls']} prefill calls for "
+          f"{s['batches']} batches ({s['decode_steps']} decode steps)")
 
 
 if __name__ == "__main__":

@@ -10,11 +10,12 @@
                   (repro.dist.pipeline).
 
 Every runner exposes the same surface — ``init``, ``loss``, ``prefill_step``,
-``init_cache``, ``serve_step``, ``param_specs``, ``cache_specs`` — so the
-launch stack (launch/train.py, launch/dryrun.py, launch/serve.py) and the
-MAB-routed SplitPlaceServer (serving/server.py) treat split decisions as a
-pure routing choice.  Module-level factories (``make_train_step``,
-``make_serve_step``) close over a runner and stay jit-friendly.
+``prefill_into_cache``, ``init_cache``, ``serve_step``, ``param_specs``,
+``cache_specs`` — so the launch stack (launch/train.py, launch/dryrun.py,
+launch/serve.py) and the MAB-routed placement engine (repro.engine, JaxBackend)
+treat split decisions as a pure routing choice.  Module-level factories
+(``make_train_step``, ``make_serve_step``) close over a runner and stay
+jit-friendly.
 """
 from __future__ import annotations
 
@@ -67,6 +68,18 @@ class BaseRunner:
     def init_cache(self, batch_size: int, cache_len: int,
                    window_override: Optional[int] = None):
         return self.model.init_cache(batch_size, cache_len, window_override)
+
+    @property
+    def supports_batched_prefill(self) -> bool:
+        """True when the model can prefill its KV cache in one batched step."""
+        return getattr(self.model, "supports_single_step_prefill", False)
+
+    def prefill_into_cache(self, params, cache, tokens, *,
+                           cache_index: int = 0):
+        """Single-step batched prompt prefill into the decode cache.
+        tokens: [B, S].  Returns ([B, vocab] last-token logits, new_cache)."""
+        return self.model.prefill_cache(params, cache, tokens,
+                                        cache_index=cache_index)
 
     def serve_step(self, params, cache, batch, cache_index, *,
                    window_override: Optional[int] = None):

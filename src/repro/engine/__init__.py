@@ -1,0 +1,34 @@
+"""repro.engine — backend-agnostic placement engine.
+
+One request lifecycle (`Request -> admit -> decide -> place -> execute ->
+observe -> EngineStats`) over two execution backends: the vectorized edge
+co-simulator (``SimBackend``) and the real JAX split runners
+(``JaxBackend``).  Policies (MAB / fixed / compression x GOBI / A3C /
+baseline placements) run unchanged against either.
+"""
+from repro.engine.arrivals import PoissonSource, TraceSource
+from repro.engine.core import ExecutionBackend, PlacementEngine
+from repro.engine.policy import (CompressionPolicy, FixedPolicy, MABPolicy,
+                                 Policy)
+from repro.engine.types import (APPS, COMPRESSED, LAYER, MODE_NAMES, SEMANTIC,
+                                EngineStats, Outcome, Request, accuracy_for,
+                                reward_for)
+
+__all__ = [
+    "APPS", "COMPRESSED", "LAYER", "MODE_NAMES", "SEMANTIC",
+    "CompressionPolicy", "EngineStats", "ExecutionBackend", "FixedPolicy",
+    "MABPolicy", "Outcome", "PlacementEngine", "PoissonSource", "Policy",
+    "Request", "TraceSource", "accuracy_for", "reward_for",
+]
+
+
+def __getattr__(name):
+    # Backends import jax / sim machinery — load lazily so policy-only users
+    # (and the sim backend on jax-less paths) stay light.
+    if name == "SimBackend":
+        from repro.engine.sim_backend import SimBackend
+        return SimBackend
+    if name == "JaxBackend":
+        from repro.engine.jax_backend import JaxBackend
+        return JaxBackend
+    raise AttributeError(name)

@@ -1,0 +1,146 @@
+"""Shared request-lifecycle types for the placement engine.
+
+One schema serves both execution backends (``repro.engine.sim_backend`` and
+``repro.engine.jax_backend``): a ``Request`` is admitted, a ``Policy`` decides
+its split mode, the backend executes it, and the completed run comes back as
+an ``Outcome`` that feeds the policy and the shared ``EngineStats`` (the
+paper's Table-I metrics schema).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.paper_workloads import WORKLOADS
+
+# Split decisions — shared by repro.sim, repro.core.mab and both backends.
+LAYER, SEMANTIC, COMPRESSED = 0, 1, 2
+MODE_NAMES = {LAYER: "layer", SEMANTIC: "semantic", COMPRESSED: "compressed"}
+
+#: application classes, in stable id order (app_id indexes this list)
+APPS = list(WORKLOADS)
+
+
+def accuracy_for(app_id: int, decision: int) -> float:
+    """Per-app accuracy of a split decision — single source of truth
+    (``repro.configs.paper_workloads.WORKLOADS``) for both backends."""
+    prof = WORKLOADS[APPS[app_id]]
+    if decision == LAYER:
+        return prof.accuracy
+    if decision == SEMANTIC:
+        return prof.accuracy - prof.sem_accuracy_drop
+    return prof.accuracy - prof.comp_accuracy_drop
+
+
+def reward_for(response_time: float, sla: float, accuracy: float) -> float:
+    """The paper's per-workload reward (§III-B), numpy-scalar flavor."""
+    return (float(response_time <= sla) + float(accuracy)) / 2.0
+
+
+@dataclass
+class Request:
+    """One inference job flowing through the engine lifecycle.
+
+    ``ctx`` is a declared field (the policy's decision context, e.g. the MAB
+    context bucket) — policies must not inject ad-hoc attributes.  Latency
+    fields report *true* per-request time: queue wait + execution, measured
+    from admission to completion.
+    """
+    rid: int
+    app_id: int
+    tokens: Optional[np.ndarray] = None   # prompt (JaxBackend only)
+    sla_s: float = 1.0
+    max_new: int = 8
+    arrival_s: Optional[float] = None     # admission time (backend clock)
+    decision: Optional[int] = None
+    ctx: Optional[object] = None          # policy decision context
+    queue_wait_s: float = 0.0
+    latency_s: float = 0.0
+    accuracy: float = 0.0
+    output: Optional[np.ndarray] = None   # generated tokens (JaxBackend)
+
+    @property
+    def wid(self) -> int:
+        """Workload id — placement policies key episodes on this."""
+        return self.rid
+
+
+@dataclass
+class Outcome:
+    """A completed request, as reported by an execution backend."""
+    request: Request
+    decision: int
+    latency_s: float          # response time: completion - admission
+    queue_wait_s: float
+    accuracy: float
+    finish_s: float           # backend-clock completion time
+
+    # -- placement-policy feedback surface (A3C keys on these) -------------
+    @property
+    def wid(self) -> int:
+        return self.request.rid
+
+    @property
+    def app_id(self) -> int:
+        return self.request.app_id
+
+    @property
+    def sla(self) -> float:
+        return self.request.sla_s
+
+    @property
+    def response_time(self) -> float:
+        return self.latency_s
+
+    @property
+    def violated(self) -> bool:
+        return self.latency_s > self.request.sla_s
+
+    @property
+    def reward(self) -> float:
+        return reward_for(self.latency_s, self.request.sla_s, self.accuracy)
+
+
+@dataclass
+class EngineStats:
+    """The shared metrics schema (paper Table I) both backends produce."""
+    completed: int = 0
+    violations: int = 0
+    per_mode: Dict[str, int] = field(default_factory=dict)
+    rewards: List[float] = field(default_factory=list)
+    latencies: List[float] = field(default_factory=list)
+    queue_waits: List[float] = field(default_factory=list)
+    accuracies: List[float] = field(default_factory=list)
+    decisions: List[int] = field(default_factory=list)
+
+    def record(self, o: Outcome) -> None:
+        self.completed += 1
+        self.violations += int(o.violated)
+        name = MODE_NAMES.get(o.decision, str(o.decision))
+        self.per_mode[name] = self.per_mode.get(name, 0) + 1
+        self.rewards.append(o.reward)
+        self.latencies.append(o.latency_s)
+        self.queue_waits.append(o.queue_wait_s)
+        self.accuracies.append(o.accuracy)
+        self.decisions.append(o.decision)
+
+    def summary(self) -> dict:
+        n = max(self.completed, 1)
+        return {
+            "completed": self.completed,
+            "sla_violation": round(self.violations / n, 4),
+            "accuracy": round(float(np.mean(self.accuracies)), 4)
+            if self.accuracies else 0.0,
+            "reward": round(float(np.mean(self.rewards)), 4)
+            if self.rewards else 0.0,
+            "mean_response_s": round(float(np.mean(self.latencies)), 4)
+            if self.latencies else 0.0,
+            "mean_queue_wait_s": round(float(np.mean(self.queue_waits)), 4)
+            if self.queue_waits else 0.0,
+            "per_mode": dict(self.per_mode),
+            "decisions_semantic_frac": round(float(np.mean(
+                [d == SEMANTIC for d in self.decisions])), 4)
+            if self.decisions else 0.0,
+        }

@@ -1,4 +1,5 @@
-"""Serving launcher: SplitPlace server over a chosen architecture and mesh.
+"""Serving launcher: the unified placement engine over a chosen architecture
+and mesh (MAB policy + JaxBackend with EDF continuous batching).
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
         --batches 8 --reduced
@@ -15,7 +16,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.serving.server import Request, SplitPlaceServer
+from repro.engine import JaxBackend, MABPolicy, PlacementEngine, Request
 
 
 def main(argv=None):
@@ -25,6 +26,7 @@ def main(argv=None):
     ap.add_argument("--batches", type=int, default=8)
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--bandit", default="ucb")
     args = ap.parse_args(argv)
@@ -35,8 +37,10 @@ def main(argv=None):
     dims = tuple(int(x) for x in args.mesh.split(","))
     mesh = jax.make_mesh(dims, ("data", "model")[:len(dims)] if len(dims) == 2
                          else ("pod", "data", "model"))
-    server = SplitPlaceServer(cfg, mesh, cache_len=args.cache_len,
-                              bandit=args.bandit)
+    eng = PlacementEngine(
+        MABPolicy(bandit=args.bandit, ema_init_values=None, n_ctx=8),
+        JaxBackend(cfg, mesh, cache_len=args.cache_len,
+                   max_batch=args.max_batch))
     rng = np.random.default_rng(0)
     rid = 0
     for b in range(args.batches):
@@ -48,8 +52,9 @@ def main(argv=None):
                 tokens=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
                 sla_s=float(0.05 if tight else 5.0), max_new=4))
             rid += 1
-        server.serve_batch(reqs)
-    print(json.dumps(server.summary(), indent=2))
+        eng.submit(reqs)
+        eng.drain()
+    print(json.dumps(eng.summary(), indent=2))
 
 
 if __name__ == "__main__":

@@ -123,6 +123,29 @@ class Model:
         return _chunked_ce(self, params, h, batch["labels"], chunk) + 0.01 * aux
 
     # ---------------------------------------------------------------- decode
+    @property
+    def supports_single_step_prefill(self) -> bool:
+        """Whole-prompt cache prefill needs pure global-attention mixers:
+        recurrent state (SSM/xLSTM) and local-window ring buffers only
+        update at S=1, and enc-dec/VLM inputs need their frontends."""
+        return (all(m == "attn" for m, _ in self.cfg.pattern)
+                and not self.cfg.is_encdec and self.cfg.frontend is None)
+
+    def prefill_cache(self, params, cache, tokens, *, cache_index: int = 0):
+        """Single-step batched prefill: one forward over the whole prompt
+        writes K/V at positions [cache_index, cache_index + S) — replaces
+        token-by-token teacher-forced prompt loops.  tokens: [B, S].
+        Returns ([B, vocab] last-position logits, new_cache)."""
+        cfg = self.cfg
+        x = L.embed_apply(params["embed"], tokens, cfg)
+        pos = cache_index + jnp.arange(tokens.shape[1])[None, :]
+        x, new_cache, _ = T.stack_apply(params["blocks"], x, cfg,
+                                        positions=pos, caches=cache,
+                                        cache_index=cache_index)
+        x = L.norm_apply(params["final_norm"], x[:, -1:], cfg)
+        logits = L.unembed_apply(params["embed"], x, cfg)
+        return logits[:, -1], new_cache
+
     def init_cache(self, batch_size: int, cache_len: int,
                    window_override: Optional[int] = None):
         cfg = self.cfg
@@ -248,6 +271,19 @@ class SemanticModel:
                      remat: bool = False):
         h, aux = self.hidden(params, batch, remat=remat)
         return _chunked_ce(self, params, h, batch["labels"], chunk) + 0.01 * aux
+
+    @property
+    def supports_single_step_prefill(self) -> bool:
+        return self.branch.supports_single_step_prefill
+
+    def prefill_cache(self, params, cache, tokens, *, cache_index: int = 0):
+        """Batched prefill per branch (vmapped), merged last-token logits."""
+        step = lambda p, c: self.branch.prefill_cache(
+            p, c, tokens, cache_index=cache_index)
+        logits, new_cache = jax.vmap(step)(params, cache)
+        # [Bb, batch, vocab/Bb] -> [batch, vocab]
+        bb, b, v = logits.shape
+        return jnp.transpose(logits, (1, 0, 2)).reshape(b, bb * v), new_cache
 
     def init_cache(self, batch_size: int, cache_len: int,
                    window_override: Optional[int] = None):

@@ -38,3 +38,12 @@ class LeastLoadedPlacement:
             return None
         return min(fitting, key=lambda h: (h.n_active, -h.ram_mb
                                            + h.ram_used_mb)).hid
+
+    def place_arrays(self, ram_mb, ram_free, n_active, speed):
+        """Vectorized fast-path over host state arrays (same ordering as
+        ``place``); used by scaled backends with thousands of hosts."""
+        feasible = np.nonzero(ram_free >= ram_mb)[0]
+        if feasible.size == 0:
+            return None
+        order = np.lexsort((-ram_free[feasible], n_active[feasible]))
+        return int(feasible[order[0]])

@@ -4,6 +4,11 @@
 ``CompressionScheduler``    — the paper's baseline: model compression
                               (no split) + the same placement policy.
 ``FixedDecisionScheduler``  — ablation: always layer / always semantic.
+
+Legacy surface for the in-process ``repro.sim.Simulator`` only.  New code
+should use the backend-agnostic ``repro.engine`` policies (``MABPolicy`` /
+``FixedPolicy`` / ``CompressionPolicy``), which run unchanged on both the
+scaled SimBackend and the real-runner JaxBackend.
 """
 from __future__ import annotations
 

@@ -1,38 +1,40 @@
-"""Batched request server with MAB-driven split decisions — the paper's
-serving story at pod scale (DESIGN.md §4).
+"""DEPRECATED shim — ``SplitPlaceServer`` is now a thin wrapper over the
+unified placement engine (``repro.engine``).
 
-Requests (prompt + SLA deadline + app class) arrive in batches.  The
-SplitDecisionEngine picks {layer -> pipeline, semantic} per request class,
-the request is routed to the corresponding pre-built executable, and the
-observed latency/accuracy-proxy feeds back into the MAB — the serving analogue
-of the edge simulator, running real JAX model steps.
+New code should use the engine API directly::
+
+    from repro.engine import MABPolicy, PlacementEngine, JaxBackend
+
+    backend = JaxBackend(cfg, mesh, cache_len=128)
+    eng = PlacementEngine(MABPolicy(bandit="ucb", seed=0), backend)
+    eng.submit(requests)            # admit -> MAB decide -> per-arm queues
+    eng.drain()                     # EDF batches, single-step batched prefill
+    eng.summary()                   # shared Table-I metrics schema
+
+This wrapper keeps the historical ``serve_batch``/``summary``/``state``
+surface (and the legacy ``ServeStats`` shape) for existing callers.  Accuracy
+proxies come from the per-app table in
+``repro.configs.paper_workloads.WORKLOADS`` — shared with the simulator
+backend — and latencies are true per-request figures (queue wait + batch
+execution), not raw batch wall time.
 """
 from __future__ import annotations
 
-import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import mab
-from repro.core.decision import SplitDecisionEngine
-from repro.dist import api as A
+from repro.engine import MABPolicy, PlacementEngine, Request  # noqa: F401
+from repro.engine.jax_backend import JaxBackend
 
+# Request is re-exported unchanged: the engine Request *is* the serving
+# request (with ``ctx`` as a declared field).
 
-@dataclass
-class Request:
-    rid: int
-    app_id: int
-    tokens: np.ndarray            # [prompt_len]
-    sla_s: float
-    max_new: int = 8
-    decision: Optional[int] = None
-    latency_s: float = 0.0
-    output: Optional[np.ndarray] = None
+_LEGACY_MODE = {mab.LAYER: "pipeline", mab.SEMANTIC: "semantic"}
 
 
 @dataclass
@@ -44,85 +46,52 @@ class ServeStats:
 
 
 class SplitPlaceServer:
-    """Holds one executable per split mode and routes via the MAB engine."""
-
-    # accuracy proxies for the reward: layer split = full model quality,
-    # semantic = block-diagonal model (paper: lower)
-    ACC = {mab.LAYER: 0.93, mab.SEMANTIC: 0.89}
+    """Deprecated: use ``repro.engine.PlacementEngine`` with ``JaxBackend``."""
 
     def __init__(self, cfg: ArchConfig, mesh, *, n_apps: int = 3,
                  bandit: str = "ucb", cache_len: int = 128, seed: int = 0):
+        warnings.warn(
+            "SplitPlaceServer is deprecated; use repro.engine "
+            "(PlacementEngine + JaxBackend)", DeprecationWarning,
+            stacklevel=2)
         self.cfg = cfg
         self.mesh = mesh
         self.cache_len = cache_len
-        self.engine = SplitDecisionEngine(n_apps, bandit=bandit, c=0.3)
-        self.state = self.engine.init(jax.random.PRNGKey(seed))
+        # historical server semantics: n_ctx=8, no E_a warm start
+        self.policy = MABPolicy(n_apps, bandit=bandit, seed=seed, n_ctx=8,
+                                ema_init_values=None, placement=None)
+        self.backend = JaxBackend(cfg, mesh, cache_len=cache_len,
+                                  max_batch=32, seed=seed)
+        self.eng = PlacementEngine(self.policy, self.backend)
         self.stats = ServeStats()
-        self.runners = {
-            mab.LAYER: A.build_runner(cfg, "pipeline", mesh),
-            mab.SEMANTIC: A.build_runner(cfg, "semantic", mesh),
-        }
-        self.params = {}
-        self.decode_fns = {}
-        key = jax.random.PRNGKey(1)
-        for arm, runner in self.runners.items():
-            self.params[arm] = runner.init(key)
-            self.decode_fns[arm] = jax.jit(
-                lambda p, c, b, i, r=runner: r.serve_step(p, c, b, i))
-        self._decide = jax.jit(self.engine.decide)
-        self._observe = jax.jit(self.engine.observe)
 
-    def _generate(self, arm: int, batch_tokens: np.ndarray, max_new: int):
-        runner = self.runners[arm]
-        b, prompt_len = batch_tokens.shape
-        cache = runner.init_cache(b, self.cache_len)
-        # prefill token-by-token (teacher-forced), then decode max_new tokens
-        tok = jnp.asarray(batch_tokens[:, :1])
-        out = []
-        for i in range(prompt_len + max_new - 1):
-            logits, cache = self.decode_fns[arm](
-                self.params[arm], cache, {"tokens": tok}, i)
-            nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            if i + 1 < prompt_len:
-                tok = jnp.asarray(batch_tokens[:, i + 1:i + 2])
-            else:
-                tok = nxt
-                out.append(np.asarray(nxt))
-        return np.concatenate(out, axis=1) if out else np.zeros((b, 0), np.int32)
+    # ------------------------------------------------- legacy compat surface
+    @property
+    def engine(self):
+        """The underlying SplitDecisionEngine (legacy attribute)."""
+        return self.policy.engine
+
+    @property
+    def state(self):
+        return self.policy.state
+
+    @property
+    def runners(self):
+        return self.backend.runners
+
+    @property
+    def params(self):
+        return self.backend.params
 
     def serve_batch(self, requests: List[Request]) -> List[Request]:
-        """Group requests by MAB decision, run each group batched."""
-        groups: Dict[int, List[Request]] = {}
-        for r in requests:
-            arm, ctx, self.state = self._decide(
-                self.state, jnp.asarray(r.app_id), jnp.asarray(r.sla_s))
-            r.decision = int(arm)
-            r._ctx = ctx
-            groups.setdefault(r.decision, []).append(r)
-
-        for arm, reqs in groups.items():
-            plen = max(len(r.tokens) for r in reqs)
-            toks = np.zeros((len(reqs), plen), np.int32)
-            for i, r in enumerate(reqs):
-                toks[i, :len(r.tokens)] = r.tokens
-            t0 = time.perf_counter()
-            out = self._generate(arm, toks, max(r.max_new for r in reqs))
-            dt = time.perf_counter() - t0
-            per_req = dt  # batch latency == per-request wall latency
-            for i, r in enumerate(reqs):
-                r.latency_s = per_req
-                r.output = out[i]
-                acc = self.ACC[arm]
-                self.state = self._observe(
-                    self.state, jnp.asarray(r.app_id), r._ctx,
-                    jnp.asarray(arm), jnp.asarray(per_req),
-                    jnp.asarray(r.sla_s), jnp.asarray(acc))
-                self.stats.served += 1
-                self.stats.violations += int(per_req > r.sla_s)
-                self.stats.rewards.append(
-                    (float(per_req <= r.sla_s) + acc) / 2)
-                name = "pipeline" if arm == mab.LAYER else "semantic"
-                self.stats.per_mode[name] = self.stats.per_mode.get(name, 0) + 1
+        """Admit a wave, drain it, return the (mutated) requests."""
+        self.eng.submit(requests)
+        for o in self.eng.drain():
+            self.stats.served += 1
+            self.stats.violations += int(o.violated)
+            self.stats.rewards.append(o.reward)
+            name = _LEGACY_MODE.get(o.decision, str(o.decision))
+            self.stats.per_mode[name] = self.stats.per_mode.get(name, 0) + 1
         return requests
 
     def summary(self) -> dict:
@@ -130,6 +99,7 @@ class SplitPlaceServer:
         return {
             "served": s.served,
             "violation_rate": round(s.violations / max(s.served, 1), 3),
-            "mean_reward": round(float(np.mean(s.rewards)), 4) if s.rewards else 0,
+            "mean_reward": round(float(np.mean(s.rewards)), 4)
+            if s.rewards else 0,
             "per_mode": s.per_mode,
         }

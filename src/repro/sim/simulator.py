@@ -52,6 +52,7 @@ class Container:
     progress: float = 0.0
     ready_at: float = 0.0           # dep + transfer gate
     done: bool = False
+    done_at: float = 0.0
 
     def runnable(self, t: float, siblings) -> bool:
         return (not self.done and self.host is not None
@@ -59,26 +60,37 @@ class Container:
                 and all(siblings[d].done for d in self.deps))
 
 
-def build_containers(w: Workload, decision: int, next_cid) -> List[Container]:
-    prof = WORKLOADS[w.app]
+def fragment_plan(prof, decision: int) -> List[tuple]:
+    """Per-decision fragment specs: [(work_s, ram_mb, dep_frag_indices)].
+
+    The single source of the split physics (§III-A), shared by the legacy
+    ``Simulator`` and the scaled ``repro.engine.SimBackend``.
+    """
     K = prof.n_fragments
     if decision == LAYER:
         work = prof.base_latency_s / K
         ram = prof.params_mb / K + RUNTIME_OVERHEAD_MB
-        w.accuracy = prof.accuracy
-        return [Container(next_cid(), w, i, LAYER, work, ram,
-                          deps=(i - 1,) if i else ())
-                for i in range(K)]
+        return [(work, ram, (i - 1,) if i else ()) for i in range(K)]
     if decision == SEMANTIC:
         work = prof.base_latency_s / K * SEMANTIC_COMPUTE_FRAC
         ram = prof.params_mb / K + RUNTIME_OVERHEAD_MB
-        w.accuracy = prof.accuracy - prof.sem_accuracy_drop
-        return [Container(next_cid(), w, i, SEMANTIC, work, ram)
-                for i in range(K)]
+        return [(work, ram, ()) for _ in range(K)]
     work = prof.base_latency_s * COMPRESSED_SPEEDUP
     ram = prof.params_mb * COMPRESSED_RAM_FRAC + RUNTIME_OVERHEAD_MB
-    w.accuracy = prof.accuracy - prof.comp_accuracy_drop
-    return [Container(next_cid(), w, 0, COMPRESSED, work, ram)]
+    return [(work, ram, ())]
+
+
+def build_containers(w: Workload, decision: int, next_cid) -> List[Container]:
+    prof = WORKLOADS[w.app]
+    if decision == LAYER:
+        w.accuracy = prof.accuracy
+    elif decision == SEMANTIC:
+        w.accuracy = prof.accuracy - prof.sem_accuracy_drop
+    else:
+        w.accuracy = prof.accuracy - prof.comp_accuracy_drop
+    return [Container(next_cid(), w, i, decision, work, ram, deps=deps)
+            for i, (work, ram, deps) in enumerate(
+                fragment_plan(prof, decision))]
 
 
 class Simulator:
@@ -157,10 +169,20 @@ class Simulator:
             h.containers.append(c)
             if c.workload.start is None:
                 c.workload.start = self.t
+            # transfer gate for dependencies that completed before this
+            # container was placed (late placement under RAM pressure)
+            sibs = self.by_workload[c.workload.wid]
+            for d in c.deps:
+                dep = sibs[d]
+                if dep.done:
+                    c.ready_at = max(c.ready_at, dep.done_at +
+                                     self.network.transfer_time(
+                                         dep.host, host, ACTIVATION_MB))
         self.unplaced = still
 
     def _complete(self, c: Container, t_done: float):
         c.done = True
+        c.done_at = t_done
         h = self.hosts[c.host]
         h.containers.remove(c)
         h.ram_used_mb -= c.ram_mb

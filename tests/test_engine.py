@@ -1,0 +1,232 @@
+"""Unified placement-engine tests: Policy protocol over both backends.
+
+Covers the gobi/a3c placement policies behind the ``Policy`` protocol (fast,
+SimBackend), the cross-backend decision-parity guarantee (same policy+seed =>
+same decision sequence on SimBackend and JaxBackend), the 1000-host
+vectorized SimBackend, and the JaxBackend's single-step batched prefill.
+"""
+import numpy as np
+import pytest
+
+from repro.engine import (LAYER, SEMANTIC, CompressionPolicy, FixedPolicy,
+                          MABPolicy, PlacementEngine, PoissonSource, Policy,
+                          Request, TraceSource)
+from repro.engine.sim_backend import SimBackend
+from repro.sched.a3c import A3CPlacement
+from repro.sched.baselines import LeastLoadedPlacement
+from repro.sched.gobi import GOBIPlacement
+
+SCHEMA_KEYS = {"completed", "sla_violation", "accuracy", "reward",
+               "mean_response_s", "mean_queue_wait_s", "per_mode",
+               "decisions_semantic_frac", "sched_time_s",
+               "sched_ms_per_decision"}
+
+
+def _sim_engine(policy, *, n_hosts=10, seed=0):
+    return PlacementEngine(policy, SimBackend(n_hosts=n_hosts, seed=seed))
+
+
+# ------------------------------------------------------- placement policies
+def test_gobi_policy_via_protocol():
+    """GOBI gradient placement runs behind the Policy protocol."""
+    policy = FixedPolicy(LAYER, GOBIPlacement(n_steps=3))
+    assert isinstance(policy, Policy)
+    eng = _sim_engine(policy, seed=4)
+    m = eng.run(PoissonSource(rate=0.4, seed=5), 250)
+    assert m["completed"] > 20
+    assert set(m["per_mode"]) == {"layer"}
+    b = eng.backend
+    assert (b.host_ram_used <= b.host_ram_mb + 1e-6).all()
+    assert (b.host_ram_used >= -1e-6).all()
+
+
+def test_a3c_policy_via_protocol():
+    """A3C placement learns from engine Outcomes without NaNs; completed
+    workloads pop their episodes."""
+    placement = A3CPlacement()
+    policy = MABPolicy(bandit="thompson", placement=placement, seed=2)
+    eng = _sim_engine(policy, seed=2)
+    m = eng.run(PoissonSource(rate=0.5, seed=6), 300)
+    assert m["completed"] > 30
+    import jax.numpy as jnp
+    for leaf in placement.params:
+        assert bool(jnp.isfinite(leaf).all())
+    # episodes are keyed by wid and popped on completion: only in-flight left
+    assert len(placement._episodes) <= eng.backend.pending()
+
+
+def test_compression_policy_single_fragment():
+    eng = _sim_engine(CompressionPolicy(LeastLoadedPlacement()), seed=1)
+    m = eng.run(PoissonSource(rate=0.4, seed=2), 200)
+    assert m["completed"] > 20
+    assert set(m["per_mode"]) == {"compressed"}
+    # compression trades accuracy for memory: below every layer-split profile
+    assert m["accuracy"] < 0.937
+
+
+# ------------------------------------------------------------ sim scale-out
+def test_sim_backend_scales_to_1000_hosts():
+    """Acceptance: the MAB SplitDecisionEngine adapter runs on a >=1000-host
+    vectorized SimBackend and produces the shared metrics schema."""
+    eng = _sim_engine(MABPolicy(bandit="ucb", seed=0), n_hosts=1000, seed=1)
+    m = eng.run(PoissonSource(rate=30, seed=3), 60)
+    assert SCHEMA_KEYS <= set(m)
+    assert m["completed"] > 500
+    assert m["energy_wh"] > 0
+    assert m["n_hosts"] == 1000
+    b = eng.backend
+    assert (b.host_ram_used <= b.host_ram_mb + 1e-6).all()
+
+
+def test_place_arrays_matches_place():
+    """The vectorized LeastLoaded fast-path picks the same host as the
+    object-based path."""
+    eng = _sim_engine(FixedPolicy(SEMANTIC, LeastLoadedPlacement()), seed=7)
+    b = eng.backend
+    eng.submit(PoissonSource(rate=3, seed=8)(0.0))
+    for _ in range(40):
+        eng.step()
+        pl = LeastLoadedPlacement()
+        for ram in (200.0, 500.0, 4000.0):
+
+            class _C:
+                ram_mb = ram
+            slow = pl.place(_C(), b.hosts)
+            fast = pl.place_arrays(ram, b.host_ram_mb - b.host_ram_used,
+                                   b.host_n_placed, b.host_speed)
+            assert slow == fast
+
+
+def test_trace_driven_arrivals():
+    """Explicit (arrival, app, sla) traces drive the engine like Poisson."""
+    trace = [(0.0, 0, 3.0), (0.5, 1, 1.0), (0.5, 2, 4.0), (2.0, 0, 2.5)]
+    src = TraceSource(trace)
+    eng = _sim_engine(FixedPolicy(SEMANTIC), seed=0)
+    eng.run(src, 50)
+    eng.drain()
+    assert src.exhausted
+    m = eng.summary()
+    assert m["completed"] == len(trace)
+    assert all(q >= 0 for q in eng.stats.queue_waits)
+    assert all(lat > 0 for lat in eng.stats.latencies)
+
+
+# ----------------------------------------------------------- cross-backend
+def _wave(vocab, n=12, seed=5):
+    rng = np.random.default_rng(seed)
+    slas = rng.uniform(0.3, 5.0, n)
+    apps = rng.integers(0, 3, n)
+    return [Request(rid=i, app_id=int(apps[i]),
+                    tokens=rng.integers(0, vocab, 4).astype(np.int32),
+                    sla_s=float(slas[i]), max_new=2) for i in range(n)]
+
+
+def test_same_policy_same_decisions_on_both_backends(tiny_cfg, tiny_mesh):
+    """One Policy instance per backend, same seed, same request wave =>
+    identical decision sequences (decisions happen at admission, before any
+    backend-specific observation), and both produce the shared schema."""
+    from repro.engine.jax_backend import JaxBackend
+
+    wave_sim = _wave(tiny_cfg.vocab_size)
+    wave_jax = _wave(tiny_cfg.vocab_size)
+
+    eng_sim = _sim_engine(MABPolicy(bandit="thompson", seed=11), seed=0)
+    eng_jax = PlacementEngine(
+        MABPolicy(bandit="thompson", seed=11),
+        JaxBackend(tiny_cfg, tiny_mesh, cache_len=16, max_batch=4))
+
+    eng_sim.submit(wave_sim)
+    eng_jax.submit(wave_jax)
+    dec_sim = [r.decision for r in wave_sim]
+    dec_jax = [r.decision for r in wave_jax]
+    assert dec_sim == dec_jax
+    assert set(dec_sim) == {LAYER, SEMANTIC}   # nontrivial sequence
+
+    eng_sim.drain()
+    eng_jax.drain()
+    m_sim, m_jax = eng_sim.summary(), eng_jax.summary()
+    for m in (m_sim, m_jax):
+        assert SCHEMA_KEYS <= set(m)
+        assert m["completed"] == len(wave_sim)
+    # same decisions -> same per-mode counts and accuracy, on both backends
+    assert m_sim["per_mode"] == m_jax["per_mode"]
+    assert m_sim["accuracy"] == pytest.approx(m_jax["accuracy"], abs=1e-6)
+
+
+# ------------------------------------------------------------- jax backend
+def test_jax_backend_batched_prefill_and_latency(tiny_cfg, tiny_mesh):
+    """Prefill is one batched step per batch (no per-token prompt loop) and
+    latencies are true per-request figures (queue wait + execution)."""
+    from repro.engine.jax_backend import JaxBackend
+
+    backend = JaxBackend(tiny_cfg, tiny_mesh, cache_len=16, max_batch=8)
+    eng = PlacementEngine(FixedPolicy(LAYER, placement=None), backend)
+    reqs = _wave(tiny_cfg.vocab_size, n=3, seed=9)
+    eng.submit(reqs)
+    eng.drain()
+    assert backend.batches == 1
+    assert backend.prefill_calls == 1          # single batched prefill step
+    assert backend.decode_steps == 1           # max_new=2 -> one decode step
+    for r in reqs:
+        assert r.output is not None and r.output.shape == (2,)
+        assert r.latency_s >= r.queue_wait_s >= 0
+        assert r.latency_s > 0
+
+    # parity with the token-by-token reference loop
+    import jax
+    import jax.numpy as jnp
+    runner = backend.runners[LAYER]
+    params = backend.params[LAYER]
+    plen = 4                                   # _wave prompt length
+    toks = np.zeros((4, plen), np.int32)       # batch padded to pow2(3)=4
+    for i, r in enumerate(reqs):
+        toks[i, :len(r.tokens)] = r.tokens
+    cache = runner.init_cache(4, 16)
+    tok = jnp.asarray(toks[:, :1])
+    out = []
+    for i in range(plen + 2 - 1):
+        logits, cache = runner.serve_step(params, cache, {"tokens": tok}, i)
+        nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        if i + 1 < plen:
+            tok = jnp.asarray(toks[:, i + 1:i + 2])
+        else:
+            tok = nxt
+            out.append(np.asarray(nxt))
+    ref = np.concatenate(out, axis=1)
+    for i, r in enumerate(reqs):
+        assert (r.output == ref[i]).all()
+
+
+def test_jax_backend_serves_compressed_arm(tiny_cfg, tiny_mesh):
+    """COMPRESSED decisions lazily build the fsdp runner — every policy runs
+    unchanged on the JaxBackend."""
+    from repro.engine.jax_backend import JaxBackend
+
+    backend = JaxBackend(tiny_cfg, tiny_mesh, cache_len=16, arms=())
+    eng = PlacementEngine(CompressionPolicy(), backend)
+    reqs = _wave(tiny_cfg.vocab_size, n=2, seed=3)
+    eng.submit(reqs)
+    eng.drain()
+    assert eng.stats.per_mode == {"compressed": 2}
+    assert all(r.output is not None for r in reqs)
+
+
+def test_jax_backend_edf_orders_by_deadline(tiny_cfg, tiny_mesh):
+    """With a queue wider than max_batch, the first formed batch holds the
+    earliest-deadline requests."""
+    from repro.engine.jax_backend import JaxBackend
+
+    backend = JaxBackend(tiny_cfg, tiny_mesh, cache_len=16, max_batch=2)
+    eng = PlacementEngine(FixedPolicy(SEMANTIC, placement=None), backend)
+    rng = np.random.default_rng(0)
+    slas = [5.0, 0.1, 3.0, 0.2]
+    reqs = [Request(rid=i, app_id=0,
+                    tokens=rng.integers(0, tiny_cfg.vocab_size,
+                                        3).astype(np.int32),
+                    sla_s=s, max_new=2) for i, s in enumerate(slas)]
+    eng.submit(reqs)
+    first = backend.step()                     # one EDF batch of 2
+    assert sorted(o.request.rid for o in first) == [1, 3]
+    eng.drain()
+    assert eng.stats.completed == 2            # drain records the rest
+    assert backend.pending() == 0
