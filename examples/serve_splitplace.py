@@ -1,9 +1,10 @@
 """Serve a (reduced) model through the unified placement engine — the
 paper's MAB policy driving REAL JAX executables via ``repro.engine``:
 layer-split requests run the GPipe pipeline runner, semantic-split requests
-run the block-diagonal branch model.  The JaxBackend forms deadline-ordered
-(EDF) batches and prefills each batch's prompts in a SINGLE batched step (no
-token-by-token prompt loop); observed latencies feed the bandit.
+run the block-diagonal branch model.  The JaxBackend runs the paged
+continuous-batching decode path (``repro.decode``): deadline-ordered (EDF)
+in-flight joins, one jitted prefill+commit per join wave, and fused
+``lax.scan`` decode dispatches; observed latencies feed the bandit.
 
     PYTHONPATH=src python examples/serve_splitplace.py --arch stablelm-1.6b
 """
@@ -46,10 +47,20 @@ def main():
         print(f"batch {b}: {[f'{r.rid}:{r.decision}' for r in reqs]}")
     s = eng.summary()
     print("summary:", s)
-    assert s["prefill_calls"] == s["batches"], \
-        "every batch must prefill in exactly one step"
-    print(f"batched prefill: {s['prefill_calls']} prefill calls for "
-          f"{s['batches']} batches ({s['decode_steps']} decode steps)")
+    if "join_waves" in s:                  # paged continuous-batching path
+        assert s["prefill_calls"] == s["join_waves"], \
+            "every join wave must prefill+commit in exactly one jitted call"
+        assert s["decoded_tokens"] >= s["decode_dispatches"], \
+            "the fused scan must amortize dispatches over tokens"
+        assert s["used_blocks"] == 0, \
+            "retired sequences must free their blocks"
+        print(f"paged decode: {s['prefill_calls']} join waves, "
+              f"{s['decode_dispatches']} scan dispatches for "
+              f"{s['decoded_tokens']} decoded tokens "
+              f"(occupancy {s['batch_occupancy']})")
+    else:                                  # recurrent mixers: legacy gang
+        print(f"legacy decode: {s['prefill_calls']} prefills, "
+              f"{s['decode_steps']} decode steps over {s['batches']} batches")
 
 
 if __name__ == "__main__":

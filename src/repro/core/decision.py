@@ -60,6 +60,36 @@ class SplitDecisionEngine:
         arm = self._select(bstate, ctx, sub)
         return arm, ctx, EngineState(state.bandit, state.ema, key)
 
+    def decide_many(self, state: EngineState, apps: jax.Array,
+                    slas: jax.Array, valid: jax.Array):
+        """Vectorized wave decision: one jitted dispatch for N same-tick
+        arrivals instead of N ``decide`` round-trips.
+
+        A ``lax.scan`` replays the exact sequential recurrence (each decision
+        splits the PRNG key once; UCB reads are pure), so the returned arm
+        sequence is bit-identical to N successive ``decide`` calls — the
+        cross-backend decision-parity guarantee survives batching.
+
+        ``valid`` marks real entries: callers pad waves to a pow2 bucket so
+        wave length doesn't become a fresh jit key per arrival count, and
+        padded steps must NOT advance the PRNG key (that would break the
+        sequential-recurrence parity).  Returns (arms [N], ctxs [N],
+        new_state); padded rows carry garbage arms the caller drops.
+        """
+        def body(key, x):
+            app, sla, ok = x
+            ea = ema_get(state.ema, app)
+            ctx = mab.context_bucket(sla / jnp.maximum(ea, 1e-6), self.n_ctx)
+            new_key, sub = jax.random.split(key)
+            bstate = jax.tree.map(lambda t: t[app], state.bandit)
+            arm = self._select(bstate, ctx, sub)
+            return jnp.where(ok, new_key, key), (arm, ctx)
+
+        key, (arms, ctxs) = jax.lax.scan(
+            body, state.key,
+            (jnp.asarray(apps), jnp.asarray(slas), jnp.asarray(valid)))
+        return arms, ctxs, EngineState(state.bandit, state.ema, key)
+
     # ------------------------------------------------------------- observe
     def observe(self, state: EngineState, app, ctx, arm, response_time, sla,
                 accuracy) -> EngineState:

@@ -1,0 +1,27 @@
+"""repro.decode — paged-KV continuous-batching decode for the real backend.
+
+The serving layer between the placement engine and the model stack:
+
+  * ``paged_cache``  — fixed-size physical KV blocks, per-sequence block
+    tables, a free-list ``BlockAllocator`` with per-arm capacity accounting.
+  * ``paged_model``  — the paged attention forward, one-call join
+    (prefill + block commit) and the fused ``lax.scan`` decode loop
+    (~1 jitted dispatch per K tokens).
+  * ``scheduler``    — ``PagedArmScheduler``: EDF in-flight joins at scan
+    boundaries, immediate retirement, occupancy + recompile accounting.
+
+``repro.engine.JaxBackend`` drives one ``PagedArmScheduler`` per split arm
+behind the unchanged ``ExecutionBackend`` protocol.
+"""
+from repro.decode.paged_cache import (NULL_BLOCK, BlockAllocator,
+                                      commit_prefill, write_slots)
+from repro.decode.paged_model import (make_decode_fn, make_join_fn,
+                                      paged_decode_logits,
+                                      supports_paged_decode)
+from repro.decode.scheduler import Lane, PagedArmScheduler
+
+__all__ = [
+    "NULL_BLOCK", "BlockAllocator", "Lane", "PagedArmScheduler",
+    "commit_prefill", "make_decode_fn", "make_join_fn",
+    "paged_decode_logits", "supports_paged_decode", "write_slots",
+]

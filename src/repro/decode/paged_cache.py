@@ -1,0 +1,132 @@
+"""Paged KV-cache management: block allocator + pool commit/write helpers.
+
+The dense per-batch ``cache_len`` buffers of the legacy serving path become a
+pool of ``num_blocks`` fixed-size physical blocks per attention layer.  A
+sequence owns a *block table* — logical block j of the sequence maps to
+physical block ``table[j]`` — so sequences of different lengths share one
+pool with no per-batch reallocation, and a finished sequence's blocks return
+to the free list immediately (the capacity lever behind in-flight joins).
+
+Physical block 0 is reserved as the *null block*: padded block-table entries
+and the write slots of inactive batch lanes all point there.  Null-block
+contents are garbage by design; attention masks them via per-sequence
+lengths, so no separate validity plumbing is needed inside jitted code.
+
+The pool itself reuses the model's dense cache factory:
+``model.init_cache(num_blocks, block_size)`` yields the identical pytree
+with leaves ``[..., P, bs, K, hd]`` — physical blocks where the dense layout
+had (batch, position) — so sharding specs and the superblock scan structure
+carry over unchanged.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+#: reserved physical block id — scratch target for padded/inactive writes
+NULL_BLOCK = 0
+
+
+class BlockAllocator:
+    """Free-list allocator over the physical block pool of one arm.
+
+    Pure host-side bookkeeping (device arrays never see the free list).
+    Invariants, property-tested in tests/test_decode.py: a block is never
+    handed out twice while live, every freed block becomes allocatable again,
+    and ``NULL_BLOCK`` is never handed out at all.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the null block)")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks - 1, NULL_BLOCK, -1))
+        self._live = set()
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return len(self._live)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop n blocks, or None (and no side effect) if the pool is short."""
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        self._live.update(ids)
+        return ids
+
+    def free(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            if i not in self._live:
+                raise ValueError(f"double free / foreign block {i}")
+            self._live.remove(i)
+            self._free.append(i)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Physical blocks needed to hold n_tokens cache slots."""
+        return -(-n_tokens // self.block_size)
+
+
+def commit_prefill(pool, dense_cache, block_ids: jax.Array):
+    """Scatter a dense prefill cache into the paged pool (jit-friendly).
+
+    ``dense_cache`` leaves: [..., B, S, K, hd] (the temporary per-wave dense
+    cache ``Model.prefill_cache`` wrote into); ``pool`` leaves:
+    [..., P, bs, K, hd]; ``block_ids``: [B, S // bs] int32 physical ids per
+    logical prompt block (entries past a sequence's allocation = NULL_BLOCK,
+    whose contents are never attended).  The leading ``...`` prefix dims
+    (superblock stack, semantic branches) must match between the two trees.
+
+    Distinct live sequences own distinct physical blocks, so the scatter has
+    no colliding indices except on the null block, where last-write-wins
+    garbage is fine.
+    """
+    ids_flat = block_ids.reshape(-1)                        # [B*nb]
+
+    def leaf(pool_leaf, dense_leaf):
+        p, bs = pool_leaf.shape[-4:-2]
+        b, s = dense_leaf.shape[-4:-2]
+        nb = s // bs
+        assert nb * bs == s, "prefill pad length must be a block multiple"
+        prefix = pool_leaf.shape[:-4]
+        pool2 = pool_leaf.reshape((-1,) + pool_leaf.shape[-4:])
+        dense2 = dense_leaf.reshape((-1,) + dense_leaf.shape[-4:])
+
+        def one(pl_, dn):
+            blocks = dn.reshape((b * nb, bs) + dn.shape[-2:])
+            return pl_.at[ids_flat].set(blocks.astype(pl_.dtype))
+
+        out = jax.vmap(one)(pool2, dense2)
+        return out.reshape(prefix + pool_leaf.shape[-4:])
+
+    return jax.tree.map(leaf, pool, dense_cache)
+
+
+def write_slots(lengths: jax.Array, block_tables: jax.Array,
+                active: jax.Array, block_size: int):
+    """(physical block, in-block offset) for each lane's next token write.
+
+    ``lengths``: [B] tokens already in cache (the write position);
+    ``block_tables``: [B, NB]; ``active``: [B] bool.  Inactive lanes route to
+    the null block so the jitted decode scan issues one unconditional
+    scatter.  Distinct active lanes own distinct blocks, so the scatter never
+    collides except on the null scratch block.
+    """
+    b = lengths.shape[0]
+    logical = lengths // block_size
+    wb = block_tables[jnp.arange(b), jnp.clip(
+        logical, 0, block_tables.shape[1] - 1)]
+    wo = lengths % block_size
+    wb = jnp.where(active, wb, NULL_BLOCK)
+    wo = jnp.where(active, wo, 0)
+    return wb.astype(jnp.int32), wo.astype(jnp.int32)

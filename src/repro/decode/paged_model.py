@@ -1,0 +1,184 @@
+"""Paged decode forward passes + the fused multi-token scan decode loop.
+
+Three jit-friendly builders over a ``repro.models`` model (single-branch
+``Model`` or the paper's ``SemanticModel``):
+
+``make_join_fn``    one jitted call per join wave: dense batched prefill
+                    (``Model.prefill_cache`` — the join entry point) into a
+                    temporary wave-local dense cache, then a block scatter
+                    (``commit_prefill``) into the arm's physical pool.
+``make_decode_fn``  the fused decode loop: ``lax.scan`` over K tokens, so
+                    decode costs ONE jitted dispatch per K tokens instead of
+                    one per token.  Per-lane ``remaining`` masks retire lanes
+                    mid-scan (writes route to the null block, lengths
+                    freeze), so a dispatch never overruns a lane's block
+                    allocation.
+``paged_decode_logits``  a single paged decode step (used by the scan body
+                    and directly by parity tests).
+
+The paged attention itself dispatches to the Pallas
+``paged_decode_attention`` kernel on TPU backends and to the dense-gather
+XLA reference elsewhere — the same dispatch convention as
+``repro.models.attention``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.decode.paged_cache import commit_prefill, write_slots
+from repro.kernels import ref
+from repro.kernels.paged_decode_attention import paged_decode_attention
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models.model import Model, SemanticModel
+
+
+def supports_paged_decode(model) -> bool:
+    """Paged decode needs pure global-attention mixers (same gate as
+    single-step prefill): recurrent state and ring buffers are not paged."""
+    return getattr(model, "supports_single_step_prefill", False)
+
+
+def _attend(q, k_pool, v_pool, block_tables, valid_lens, softcap,
+            interpret: bool):
+    if interpret or jax.default_backend() == "tpu":
+        return paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                      valid_lens, softcap=softcap,
+                                      interpret=interpret)
+    return ref.paged_decode_attention_ref(q, k_pool, v_pool, block_tables,
+                                          valid_lens, softcap=softcap)
+
+
+def _paged_attn(params, x, cfg: ArchConfig, *, positions, pool, block_tables,
+                valid_lens, wb, wo, interpret: bool):
+    """One-token GQA attention against the paged pool: scatter the new K/V
+    into (wb, wo) write slots, then attend through the block table."""
+    b, s, _ = x.shape                       # s == 1
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (x @ params["wk"]).reshape(b, s, kv, hd)
+    v = (x @ params["wv"]).reshape(b, s, kv, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    pk = pool["k"].at[wb, wo].set(k[:, 0].astype(pool["k"].dtype))
+    pv = pool["v"].at[wb, wo].set(v[:, 0].astype(pool["v"].dtype))
+    out = _attend(q[:, 0], pk, pv, block_tables, valid_lens,
+                  cfg.attn_softcap, interpret)
+    out = out.reshape(b, s, h * hd) @ params["wo"]
+    return out, {"k": pk, "v": pv}
+
+
+def _paged_step_one(model: Model, params, pool, tokens, block_tables,
+                    lengths, active, *, interpret: bool):
+    """Single-branch paged decode step.  tokens: [B, 1]; lengths: [B] tokens
+    already in cache (== the new token's position).  Returns
+    ([B, vocab] logits, new_pool)."""
+    cfg = model.cfg
+    # pool leaves are [N_sb, P, bs, K, hd]; block size from any leaf
+    block_size = jax.tree.leaves(pool)[0].shape[2]
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    positions = lengths[:, None]
+    wb, wo = write_slots(lengths, block_tables, active, block_size)
+    valid_lens = lengths + active.astype(jnp.int32)
+
+    def body(h, xs):
+        sb_params, sb_pool = xs
+        new_sb_pool = {}
+        for i, (mixer, ffn) in enumerate(cfg.pattern):
+            assert mixer == "attn", "paged decode requires global attention"
+            blk = sb_params[f"pos{i}"]
+            hn = L.norm_apply(blk["mix_norm"], h, cfg)
+            out, npool = _paged_attn(
+                blk["mix"], hn, cfg, positions=positions,
+                pool=sb_pool[f"pos{i}"], block_tables=block_tables,
+                valid_lens=valid_lens, wb=wb, wo=wo, interpret=interpret)
+            if cfg.post_norms:
+                out = L.norm_apply(blk["mix_post_norm"], out, cfg)
+            h = h + out
+            if ffn != "none":
+                hn = L.norm_apply(blk["ffn_norm"], h, cfg)
+                if ffn == "dense":
+                    out = L.mlp_apply(blk["ffn"], hn, cfg)
+                else:
+                    out, _ = M.moe_apply(blk["ffn"], hn, cfg)
+                if cfg.post_norms:
+                    out = L.norm_apply(blk["ffn_post_norm"], out, cfg)
+                h = h + out
+            new_sb_pool[f"pos{i}"] = npool
+        return h, new_sb_pool
+
+    x, new_pool = jax.lax.scan(body, x, (params["blocks"], pool))
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.unembed_apply(params["embed"], x, cfg)
+    return logits[:, -1], new_pool
+
+
+def paged_decode_logits(model, params, pool, tokens, block_tables, lengths,
+                        active, *, interpret: bool = False):
+    """One paged decode step for either model flavor.  Semantic models vmap
+    the branch step over (params, pool) and merge the vocab shards."""
+    if isinstance(model, SemanticModel):
+        step = lambda p, c: _paged_step_one(
+            model.branch, p, c, tokens, block_tables, lengths, active,
+            interpret=interpret)
+        logits, new_pool = jax.vmap(step)(params, pool)
+        bb, b, v = logits.shape
+        return jnp.transpose(logits, (1, 0, 2)).reshape(b, bb * v), new_pool
+    return _paged_step_one(model, params, pool, tokens, block_tables,
+                           lengths, active, interpret=interpret)
+
+
+# ---------------------------------------------------------------- factories
+def make_join_fn(model, *, interpret: bool = False):
+    """(params, pool, toks [W, S_pad], lengths [W], block_ids [W, S_pad/bs])
+    -> ([W, vocab] per-sequence last-prompt-position logits, new_pool).
+
+    One jitted call per join wave: dense prefill into a temporary wave-local
+    cache via ``Model.prefill_cache`` (the join entry point), then the block
+    scatter into the arm pool.  S_pad must be a block multiple; padded table
+    entries point at the null block.
+    """
+    del interpret  # prefill runs the standard dense stack
+
+    def join(params, pool, toks, lengths, block_ids):
+        dense = model.init_cache(toks.shape[0], toks.shape[1])
+        logits, dense = model.prefill_cache(params, dense, toks,
+                                            lengths=lengths)
+        return logits, commit_prefill(pool, dense, block_ids)
+
+    return join
+
+
+def make_decode_fn(model, *, scan_tokens: int, interpret: bool = False):
+    """The fused multi-token decode loop: one jitted dispatch decodes up to
+    ``scan_tokens`` greedy tokens for every active lane.
+
+    (params, pool, tok [B,1], block_tables [B,NB], lengths [B],
+     remaining [B]) -> (new_pool, tok', lengths', remaining', toks [B, K]).
+
+    ``remaining`` is the per-lane token budget; a lane with remaining == 0 is
+    inactive for the rest of the dispatch (null-block writes, frozen length),
+    which is what lets heterogeneous ``max_new`` batches share one scan.
+    """
+
+    def decode(params, pool, tok, block_tables, lengths, remaining):
+        def step(carry, _):
+            pool, tok, lengths, remaining = carry
+            active = remaining > 0
+            logits, pool = paged_decode_logits(
+                model, params, pool, tok, block_tables, lengths, active,
+                interpret=interpret)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok = jnp.where(active, nxt, tok[:, 0])[:, None]
+            lengths = lengths + active.astype(jnp.int32)
+            remaining = remaining - active.astype(jnp.int32)
+            return (pool, tok, lengths, remaining), nxt
+
+        carry, toks = jax.lax.scan(
+            step, (pool, tok, lengths, remaining), length=scan_tokens)
+        pool, tok, lengths, remaining = carry
+        return pool, tok, lengths, remaining, toks.T
+
+    return decode

@@ -75,11 +75,14 @@ class BaseRunner:
         return getattr(self.model, "supports_single_step_prefill", False)
 
     def prefill_into_cache(self, params, cache, tokens, *,
-                           cache_index: int = 0):
+                           cache_index: int = 0, lengths=None):
         """Single-step batched prompt prefill into the decode cache.
-        tokens: [B, S].  Returns ([B, vocab] last-token logits, new_cache)."""
+        tokens: [B, S].  Returns ([B, vocab] last-token logits, new_cache).
+        ``lengths`` selects each sequence's true last prompt position for the
+        returned logits (right-padded join waves; see Model.prefill_cache)."""
         return self.model.prefill_cache(params, cache, tokens,
-                                        cache_index=cache_index)
+                                        cache_index=cache_index,
+                                        lengths=lengths)
 
     def serve_step(self, params, cache, batch, cache_index, *,
                    window_override: Optional[int] = None):

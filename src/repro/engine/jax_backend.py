@@ -1,17 +1,24 @@
 """JaxBackend — real JAX split executables as an ExecutionBackend.
 
 Wraps the ``repro.dist`` runners (LAYER -> "pipeline", SEMANTIC ->
-"semantic", COMPRESSED -> "fsdp") behind deadline-aware continuous batching:
+"semantic", COMPRESSED -> "fsdp") behind deadline-aware scheduling.  Two
+decode paths per arm:
 
-  * per-arm queues; each engine step forms ONE batch from the arm whose
-    head-of-line absolute deadline (admission + SLA) is earliest,
-  * EDF batch formation: up to ``max_batch`` most-urgent requests,
-  * a single batched prefill step (``runner.prefill_into_cache``) writes the
-    whole padded prompt into the KV cache in one jitted call — no
-    token-by-token prompt loop — then ``max_new`` decode steps.
+  * **paged** (default for pure-attention models): a ``repro.decode``
+    ``PagedArmScheduler`` per arm — paged KV blocks, EDF in-flight joins at
+    scan boundaries, and a fused ``lax.scan`` decode loop that costs ~1
+    jitted dispatch per ``scan_tokens`` tokens.  Short requests retire the
+    moment their budget is spent; they never wait for the batch's longest
+    request.
+  * **legacy** (recurrent mixers, or ``decode="legacy"``): rigid
+    gang-scheduled EDF batches — one batched prefill
+    (``runner.prefill_into_cache``) then one jitted decode call per token.
 
-Latency is the true per-request figure: queue wait (admission -> batch
-formation) + batch execution.
+Latency is the true per-request figure: queue wait (admission -> join /
+batch formation) + execution.  ``extra_metrics`` reports dispatch counters,
+steady-state batch occupancy, per-arm block-pool accounting, and
+prefill-bucket compilation hits/misses (recompile churn is visible, not
+silent).
 """
 from __future__ import annotations
 
@@ -26,41 +33,47 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.dist import api as A
 from repro.engine.types import (COMPRESSED, LAYER, SEMANTIC, Outcome, Request,
-                                accuracy_for)
+                                accuracy_for, next_pow2)
 
 ARM_MODES = {LAYER: "pipeline", SEMANTIC: "semantic", COMPRESSED: "fsdp"}
-
-
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
 
 
 class JaxBackend:
     def __init__(self, cfg: ArchConfig, mesh, *, cache_len: int = 128,
                  max_batch: int = 8, seed: int = 0,
-                 arms=(LAYER, SEMANTIC)):
+                 arms=(LAYER, SEMANTIC), decode: str = "auto",
+                 scan_tokens: int = 8, block_size: int = 16,
+                 num_blocks: Optional[int] = None):
+        if decode not in ("auto", "paged", "legacy"):
+            raise ValueError(f"decode={decode!r}; expected auto|paged|legacy")
         self.cfg = cfg
         self.mesh = mesh
         self.cache_len = cache_len
         self.max_batch = max_batch
+        self.decode = decode
+        self.scan_tokens = scan_tokens
+        self.block_size = min(block_size, cache_len)
+        self.num_blocks = num_blocks
         self._init_key = jax.random.PRNGKey(seed + 1)
         self.runners: Dict[int, object] = {}
         self.params: Dict[int, object] = {}
         self._prefill_fns: Dict[int, object] = {}
         self._decode_fns: Dict[int, object] = {}
+        self._paged: Dict[int, object] = {}   # arm -> PagedArmScheduler
         # (abs_deadline, seq, enqueue_t, request) heaps per arm
         self._queues: Dict[int, list] = {}
-        for arm in arms:
-            self._ensure_arm(arm)
         self._seq = 0
         self._t0 = time.perf_counter()
-        # instrumentation: batched-prefill accounting
-        self.prefill_calls = 0
-        self.decode_steps = 0
-        self.batches = 0
+        # instrumentation
+        self._legacy_prefills = 0
+        self.decode_steps = 0                 # legacy per-token decode calls
+        self.batches = 0                      # legacy gang batches
+        self._legacy_buckets: Dict[tuple, int] = {}
+        # legacy occupancy: useful decode tokens / (padded lanes x steps)
+        self._legacy_useful = 0
+        self._legacy_lane_steps = 0
+        for arm in arms:
+            self._ensure_arm(arm)
 
     def _ensure_arm(self, arm: int) -> None:
         """Build the runner/executables for a split arm on first use — any
@@ -71,6 +84,12 @@ class JaxBackend:
             raise ValueError(f"unknown split decision {arm!r}; expected one "
                              f"of {sorted(ARM_MODES)}")
         r = A.build_runner(self.cfg, ARM_MODES[arm], self.mesh)
+        if self.decode == "paged" and not r.supports_batched_prefill:
+            # reject BEFORE registering: a half-registered arm would let a
+            # retried submit fall through to the legacy path silently
+            raise ValueError(
+                f"decode='paged' but arm {arm} (mode {ARM_MODES[arm]}) has "
+                "recurrent mixers; use decode='auto' for a legacy fallback")
         self.runners[arm] = r
         self.params[arm] = r.init(self._init_key)
         self._prefill_fns[arm] = jax.jit(
@@ -78,6 +97,12 @@ class JaxBackend:
         self._decode_fns[arm] = jax.jit(
             lambda p, c, b, i, r=r: r.serve_step(p, c, b, i))
         self._queues[arm] = []
+        if self.decode != "legacy" and r.supports_batched_prefill:
+            from repro.decode import PagedArmScheduler
+            self._paged[arm] = PagedArmScheduler(
+                r.model, self.params[arm], n_lanes=self.max_batch,
+                cache_len=self.cache_len, block_size=self.block_size,
+                num_blocks=self.num_blocks, scan_tokens=self.scan_tokens)
 
     # ------------------------------------------------------------- lifecycle
     @property
@@ -85,10 +110,14 @@ class JaxBackend:
         return time.perf_counter() - self._t0
 
     def pending(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        queued = sum(len(q) for q in self._queues.values())
+        in_flight = sum(s.n_active for s in self._paged.values())
+        return queued + in_flight
 
     def submit(self, req: Request) -> None:
         self._ensure_arm(req.decision)
+        if req.decision in self._paged:
+            self._paged[req.decision].validate(req)
         enq = self.now
         deadline = (req.arrival_s if req.arrival_s is not None else enq) \
             + req.sla_s
@@ -97,14 +126,68 @@ class JaxBackend:
         self._seq += 1
 
     # --------------------------------------------------------------- serving
-    def _form_batch(self) -> Optional[tuple]:
-        """Pick the arm with the earliest head-of-line deadline (EDF) and pop
-        up to max_batch most-urgent requests from it."""
-        live = [(q[0][0], arm) for arm, q in self._queues.items() if q]
-        if not live:
-            return None
-        _, arm = min(live)
+    def _arm_urgency(self, arm: int) -> Optional[float]:
+        """Earliest deadline this arm owes: queue head or in-flight lane."""
+        cand = []
+        if self._queues[arm]:
+            cand.append(self._queues[arm][0][0])
+        sched = self._paged.get(arm)
+        if sched is not None:
+            d = sched.earliest_deadline()
+            if d is not None:
+                cand.append(d)
+        return min(cand) if cand else None
+
+    def _pick_arm(self) -> Optional[int]:
+        live = [(u, arm) for arm in self._queues
+                if (u := self._arm_urgency(arm)) is not None]
+        return min(live)[1] if live else None
+
+    def _outcome(self, req: Request, arm: int, enq: float, exec_start: float,
+                 out: np.ndarray, finish: float) -> Outcome:
+        req.queue_wait_s = exec_start - enq
+        req.latency_s = finish - enq        # queue wait + execution
+        req.output = out
+        req.accuracy = accuracy_for(req.app_id, arm)
+        return Outcome(request=req, decision=arm, latency_s=req.latency_s,
+                       queue_wait_s=req.queue_wait_s, accuracy=req.accuracy,
+                       finish_s=finish)
+
+    @property
+    def prefill_calls(self) -> int:
+        """Batched prefill dispatches: legacy gang prefills + join waves
+        (every join wave is exactly one prefill+commit call)."""
+        return self._legacy_prefills + sum(s.join_waves
+                                           for s in self._paged.values())
+
+    # ----------------------------------------------------- paged decode path
+    def _step_paged(self, arm: int) -> List[Outcome]:
+        """One scan boundary: join queued requests into free lanes, run one
+        fused decode dispatch, retire finished lanes immediately.  Lanes
+        retired at join time (max_new == 1) are stamped BEFORE the decode
+        dispatch — their response time must not absorb an unrelated scan."""
+        sched = self._paged[arm]
+        done = sched.try_join(self._queues[arm], self.now)
+        join_finish = self.now
+        outcomes = [
+            self._outcome(lane.req, arm, lane.enq, lane.join_t,
+                          np.asarray(lane.out[:lane.req.max_new], np.int32),
+                          join_finish)
+            for lane in done]
+        retired = sched.dispatch(self.now)
+        finish = self.now
+        for lane in retired:
+            out = np.asarray(lane.out[:lane.req.max_new], np.int32)
+            outcomes.append(self._outcome(lane.req, arm, lane.enq,
+                                          lane.join_t, out, finish))
+        return outcomes
+
+    # ---------------------------------------------------- legacy gang path
+    def _form_batch(self, arm: int) -> Optional[tuple]:
+        """Pop up to max_batch most-urgent requests from the arm's heap."""
         q = self._queues[arm]
+        if not q:
+            return None
         picked = [heapq.heappop(q) for _ in range(min(self.max_batch, len(q)))]
         return arm, picked
 
@@ -112,12 +195,16 @@ class JaxBackend:
         """Batched prefill (single jitted step) + max_new decode steps."""
         runner = self.runners[arm]
         b, plen = batch_tokens.shape
+        # padded-prompt bucketing compiles per (arm, batch, prompt) bucket;
+        # count it so extra_metrics can report recompile churn
+        self._legacy_buckets[(arm, b, plen)] = \
+            self._legacy_buckets.get((arm, b, plen), 0) + 1
         cache = runner.init_cache(b, self.cache_len)
         toks = jnp.asarray(batch_tokens)
         if runner.supports_batched_prefill:
             logits, cache = self._prefill_fns[arm](
                 self.params[arm], cache, toks)
-            self.prefill_calls += 1
+            self._legacy_prefills += 1
         else:
             # recurrent mixers (SSM/xLSTM) keep S=1 state updates: fall back
             # to a teacher-forced prompt loop
@@ -135,8 +222,8 @@ class JaxBackend:
             out.append(np.asarray(tok))
         return np.concatenate(out, axis=1).astype(np.int32)
 
-    def step(self, policy=None) -> List[Outcome]:
-        formed = self._form_batch()
+    def _step_legacy(self, arm: int) -> List[Outcome]:
+        formed = self._form_batch(arm)
         if formed is None:
             return []
         arm, picked = formed
@@ -149,30 +236,54 @@ class JaxBackend:
         # keep the legacy teacher-forced-pad semantics of a shared cache
         # index); batch dim pads to pow2 to bound recompiles
         plen = max(len(r.tokens) for r in reqs)
-        b = _next_pow2(len(reqs))
+        b = next_pow2(len(reqs))
         toks = np.zeros((b, plen), np.int32)
         for i, r in enumerate(reqs):
             toks[i, :len(r.tokens)] = r.tokens
         out = self._generate(arm, toks, max_new)
         finish = self.now
         self.batches += 1
+        # gang occupancy: every lane decodes to the batch's longest request
+        self._legacy_useful += sum(r.max_new - 1 for r in reqs)
+        self._legacy_lane_steps += b * (max_new - 1)
+        return [self._outcome(r, arm, enq, exec_start, out[i, :r.max_new],
+                              finish)
+                for i, (r, enq) in enumerate(zip(reqs, enqs))]
 
-        outcomes = []
-        for i, (r, enq) in enumerate(zip(reqs, enqs)):
-            r.queue_wait_s = exec_start - enq
-            r.latency_s = finish - enq         # queue wait + batch execution
-            r.output = out[i, :r.max_new]
-            r.accuracy = accuracy_for(r.app_id, arm)
-            outcomes.append(Outcome(
-                request=r, decision=arm, latency_s=r.latency_s,
-                queue_wait_s=r.queue_wait_s, accuracy=r.accuracy,
-                finish_s=finish))
-        return outcomes
+    def step(self, policy=None) -> List[Outcome]:
+        arm = self._pick_arm()
+        if arm is None:
+            return []
+        if arm in self._paged:
+            return self._step_paged(arm)
+        return self._step_legacy(arm)
 
     # --------------------------------------------------------------- metrics
     def extra_metrics(self) -> dict:
-        return {
+        m = {
             "batches": self.batches,
             "prefill_calls": self.prefill_calls,
             "decode_steps": self.decode_steps,
         }
+        if self._legacy_buckets:
+            calls = sum(self._legacy_buckets.values())
+            m["prefill_bucket_misses"] = len(self._legacy_buckets)
+            m["prefill_bucket_hits"] = calls - len(self._legacy_buckets)
+            m["prefill_buckets"] = {
+                f"arm{a}:b{b}xs{s}": n
+                for (a, b, s), n in sorted(self._legacy_buckets.items())}
+        if self._paged:
+            agg: Dict[str, float] = {}
+            for sched in self._paged.values():
+                for k, v in sched.stats().items():
+                    if k in ("batch_occupancy", "mean_active_lanes"):
+                        continue
+                    agg[k] = agg.get(k, 0) + v
+            tokens = sum(s.decoded_tokens for s in self._paged.values())
+            steps = sum(s.lane_steps for s in self._paged.values())
+            agg["batch_occupancy"] = round(tokens / max(steps, 1), 4)
+            m.update(agg)
+        elif self._legacy_lane_steps:
+            m["batch_occupancy"] = round(
+                self._legacy_useful / self._legacy_lane_steps, 4)
+        return m

@@ -22,6 +22,7 @@ from typing import Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.paper_workloads import WORKLOADS
 from repro.core.decision import SplitDecisionEngine
@@ -82,6 +83,7 @@ class MABPolicy(_PlacementMixin):
         self.placement = placement if placement is not None \
             else LeastLoadedPlacement()
         self._decide = jax.jit(self.engine.decide)
+        self._decide_many = jax.jit(self.engine.decide_many)
         self._observe = jax.jit(self.engine.observe)
 
     def decide(self, request: Request) -> int:
@@ -90,6 +92,29 @@ class MABPolicy(_PlacementMixin):
             jnp.asarray(request.sla_s))
         request.ctx = ctx
         return int(arm)
+
+    def decide_batch(self, requests) -> list:
+        """Decide a whole same-tick arrival wave in ONE jitted UCB dispatch
+        (the per-request ``decide`` round-trip dominates sched time at high
+        arrival rates).  Bit-identical to sequential ``decide`` calls — the
+        scan inside ``SplitDecisionEngine.decide_many`` replays the exact
+        key-split recurrence, and waves pad to a pow2 bucket (padded steps
+        leave the key untouched) so wave size doesn't recompile per count."""
+        n = len(requests)
+        n_pad = 1
+        while n_pad < n:
+            n_pad *= 2
+        apps = np.zeros(n_pad, np.int32)
+        slas = np.ones(n_pad, np.float32)
+        apps[:n] = [r.app_id for r in requests]
+        slas[:n] = [r.sla_s for r in requests]
+        valid = np.arange(n_pad) < n
+        arms, ctxs, self.state = self._decide_many(
+            self.state, jnp.asarray(apps), jnp.asarray(slas),
+            jnp.asarray(valid))
+        for r, ctx in zip(requests, ctxs[:n]):
+            r.ctx = ctx
+        return [int(a) for a in arms[:n]]
 
     def observe(self, outcome: Outcome) -> None:
         self.state = self._observe(

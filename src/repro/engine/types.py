@@ -23,6 +23,16 @@ MODE_NAMES = {LAYER: "layer", SEMANTIC: "semantic", COMPRESSED: "compressed"}
 APPS = list(WORKLOADS)
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n — THE bucketing rule for every jit key in
+    the serving stack (batch widths, prompt pads, decide waves, scan
+    lengths), shared so the compile-churn policy can't drift per call site."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
 def accuracy_for(app_id: int, decision: int) -> float:
     """Per-app accuracy of a split decision — single source of truth
     (``repro.configs.paper_workloads.WORKLOADS``) for both backends."""

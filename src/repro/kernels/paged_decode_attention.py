@@ -1,0 +1,101 @@
+"""Paged single-token decode attention — Pallas TPU kernel.
+
+The continuous-batching decode path (``repro.decode``) keeps the KV cache as
+a pool of fixed-size physical blocks; a per-sequence block table maps logical
+block j to its physical slot.  This kernel walks the block table, DMA-gathers
+one physical K/V block per step, and folds it into the running flash
+(max, sum, acc) state — the same online-softmax pattern as
+``decode_attention``, but the cache never has to be contiguous per sequence.
+
+Grid: (B, K_heads); the GQA group's queries (H/K heads) ride together so each
+physical block is read ONCE per kv head.  Blocks past the sequence's fill
+level are skipped entirely; partial tail blocks are masked via ``lengths``.
+Block id 0 is the allocator's reserved null block: padded table entries point
+there and are never attended (they sit beyond the fill level).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, *,
+                  block_size: int, scale: float, softcap: float):
+    # len_ref: [1]; bt_ref: [NB]; q_ref: [rep, hd];
+    # k_ref/v_ref: [P*bs, hd] (pool for this kv head); o_ref: [rep, hd]
+    rep, hd = q_ref.shape
+    nb = bt_ref.shape[0]
+    q = q_ref[...].astype(jnp.float32) * scale
+    valid_len = len_ref[0]
+
+    def body(j, carry):
+        acc, m_prev, l_prev = carry
+        bid = bt_ref[j]                                   # physical block id
+        k = pl.load(k_ref, (pl.dslice(bid * block_size, block_size),
+                            slice(None)))
+        v = pl.load(v_ref, (pl.dslice(bid * block_size, block_size),
+                            slice(None)))
+        s = q @ k.astype(jnp.float32).T                   # [rep, bs]
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
+        s = jnp.where(pos[None, :] < valid_len, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = alpha * l_prev + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return acc, m_cur, l_cur
+
+    # walk only the logical blocks below the fill level
+    n_eff = jnp.minimum(jnp.asarray(nb, jnp.int32),
+                        pl.cdiv(valid_len, block_size)).astype(jnp.int32)
+    acc0 = jnp.zeros((rep, hd), jnp.float32)
+    m0 = jnp.full((rep,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((rep,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, n_eff, body, (acc0, m0, l0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           softcap: float = 0.0, interpret: bool = False):
+    """q: [B, H, hd] (one token per sequence); k/v_pool: [P, bs, K, hd]
+    physical block pools; block_tables: [B, NB] int32; lengths: [B] valid
+    token counts.  Returns [B, H, hd]."""
+    b, h, hd = q.shape
+    p_blocks, bs, kh, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    assert h % kh == 0
+    rep = h // kh
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(b, kh, rep, hd)
+    # pool per kv head, flattened over (block, slot) so a physical block j is
+    # the contiguous row range [j*bs, (j+1)*bs)
+    kt = k_pool.transpose(2, 0, 1, 3).reshape(kh, p_blocks * bs, hd)
+    vt = v_pool.transpose(2, 0, 1, 3).reshape(kh, p_blocks * bs, hd)
+
+    kernel = functools.partial(_paged_kernel, block_size=bs, scale=scale,
+                               softcap=softcap)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kh),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, ki: (bi,)),
+            pl.BlockSpec((None, nb), lambda bi, ki: (bi, 0)),
+            pl.BlockSpec((None, None, rep, hd), lambda bi, ki: (bi, ki, 0, 0)),
+            pl.BlockSpec((None, p_blocks * bs, hd), lambda bi, ki: (ki, 0, 0)),
+            pl.BlockSpec((None, p_blocks * bs, hd), lambda bi, ki: (ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, rep, hd),
+                               lambda bi, ki: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, rep, hd), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(b, h, hd)

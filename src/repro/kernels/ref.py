@@ -79,3 +79,21 @@ def decode_attention_ref(q, k_cache, v_cache, length, *, softcap=0.0):
     s = jnp.where(valid, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhl,blhd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                               softcap=0.0):
+    """Dense-gather oracle for the paged decode kernel.
+
+    q: [B, H, hd]; k/v_pool: [P, bs, K, hd] physical block pools;
+    block_tables: [B, NB] int32 (entry 0 = reserved null block);
+    lengths: [B] valid token count per sequence.  Gathers each sequence's
+    blocks into a dense [B, NB*bs, K, hd] cache and defers to
+    ``decode_attention_ref``.
+    """
+    k = k_pool[block_tables]                    # [B, NB, bs, K, hd]
+    v = v_pool[block_tables]
+    b, nb, bs, kh, hd = k.shape
+    k = k.reshape(b, nb * bs, kh, hd)
+    v = v.reshape(b, nb * bs, kh, hd)
+    return decode_attention_ref(q, k, v, lengths, softcap=softcap)

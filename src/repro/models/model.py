@@ -131,18 +131,33 @@ class Model:
         return (all(m == "attn" for m, _ in self.cfg.pattern)
                 and not self.cfg.is_encdec and self.cfg.frontend is None)
 
-    def prefill_cache(self, params, cache, tokens, *, cache_index: int = 0):
+    def prefill_cache(self, params, cache, tokens, *, cache_index: int = 0,
+                      lengths=None):
         """Single-step batched prefill: one forward over the whole prompt
         writes K/V at positions [cache_index, cache_index + S) — replaces
         token-by-token teacher-forced prompt loops.  tokens: [B, S].
-        Returns ([B, vocab] last-position logits, new_cache)."""
+        Returns ([B, vocab] logits, new_cache).
+
+        ``lengths`` ([B] int, optional) handles right-padded join waves: the
+        returned logits come from each sequence's true last prompt position
+        (``lengths - 1``) instead of the shared padded last column.  Causal
+        attention guarantees the pad tail never contaminates K/V at positions
+        below ``lengths``, so a padded member decodes identically to a solo
+        unpadded run (the in-flight-join parity contract of ``repro.decode``).
+        """
         cfg = self.cfg
         x = L.embed_apply(params["embed"], tokens, cfg)
         pos = cache_index + jnp.arange(tokens.shape[1])[None, :]
         x, new_cache, _ = T.stack_apply(params["blocks"], x, cfg,
                                         positions=pos, caches=cache,
                                         cache_index=cache_index)
-        x = L.norm_apply(params["final_norm"], x[:, -1:], cfg)
+        if lengths is None:
+            x = x[:, -1:]
+        else:
+            idx = (jnp.asarray(lengths, jnp.int32) - 1)[:, None, None]
+            x = jnp.take_along_axis(x, jnp.broadcast_to(
+                idx, (x.shape[0], 1, x.shape[2])), axis=1)
+        x = L.norm_apply(params["final_norm"], x, cfg)
         logits = L.unembed_apply(params["embed"], x, cfg)
         return logits[:, -1], new_cache
 
@@ -276,10 +291,11 @@ class SemanticModel:
     def supports_single_step_prefill(self) -> bool:
         return self.branch.supports_single_step_prefill
 
-    def prefill_cache(self, params, cache, tokens, *, cache_index: int = 0):
+    def prefill_cache(self, params, cache, tokens, *, cache_index: int = 0,
+                      lengths=None):
         """Batched prefill per branch (vmapped), merged last-token logits."""
         step = lambda p, c: self.branch.prefill_cache(
-            p, c, tokens, cache_index=cache_index)
+            p, c, tokens, cache_index=cache_index, lengths=lengths)
         logits, new_cache = jax.vmap(step)(params, cache)
         # [Bb, batch, vocab/Bb] -> [batch, vocab]
         bb, b, v = logits.shape

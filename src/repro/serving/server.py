@@ -8,7 +8,7 @@ New code should use the engine API directly::
     backend = JaxBackend(cfg, mesh, cache_len=128)
     eng = PlacementEngine(MABPolicy(bandit="ucb", seed=0), backend)
     eng.submit(requests)            # admit -> MAB decide -> per-arm queues
-    eng.drain()                     # EDF batches, single-step batched prefill
+    eng.drain()                     # EDF in-flight joins, paged scan decode
     eng.summary()                   # shared Table-I metrics schema
 
 This wrapper keeps the historical ``serve_batch``/``summary``/``state``
@@ -74,14 +74,6 @@ class SplitPlaceServer:
     @property
     def state(self):
         return self.policy.state
-
-    @property
-    def runners(self):
-        return self.backend.runners
-
-    @property
-    def params(self):
-        return self.backend.params
 
     def serve_batch(self, requests: List[Request]) -> List[Request]:
         """Admit a wave, drain it, return the (mutated) requests."""

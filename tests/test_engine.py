@@ -155,11 +155,14 @@ def test_same_policy_same_decisions_on_both_backends(tiny_cfg, tiny_mesh):
 
 # ------------------------------------------------------------- jax backend
 def test_jax_backend_batched_prefill_and_latency(tiny_cfg, tiny_mesh):
-    """Prefill is one batched step per batch (no per-token prompt loop) and
-    latencies are true per-request figures (queue wait + execution)."""
+    """Legacy gang path: prefill is one batched step per batch (no per-token
+    prompt loop) and latencies are true per-request figures (queue wait +
+    execution).  The paged continuous-batching path is covered in
+    tests/test_decode.py."""
     from repro.engine.jax_backend import JaxBackend
 
-    backend = JaxBackend(tiny_cfg, tiny_mesh, cache_len=16, max_batch=8)
+    backend = JaxBackend(tiny_cfg, tiny_mesh, cache_len=16, max_batch=8,
+                         decode="legacy")
     eng = PlacementEngine(FixedPolicy(LAYER, placement=None), backend)
     reqs = _wave(tiny_cfg.vocab_size, n=3, seed=9)
     eng.submit(reqs)
