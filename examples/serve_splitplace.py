@@ -3,8 +3,9 @@ paper's MAB policy driving REAL JAX executables via ``repro.engine``:
 layer-split requests run the GPipe pipeline runner, semantic-split requests
 run the block-diagonal branch model.  The JaxBackend runs the paged
 continuous-batching decode path (``repro.decode``): deadline-ordered (EDF)
-in-flight joins, one jitted prefill+commit per join wave, and fused
-``lax.scan`` decode dispatches; observed latencies feed the bandit.
+in-flight joins with prefix-cache hits on the shared block pool, chunked
+tail prefill, and fused ``lax.scan`` decode dispatches; observed latencies
+feed the bandit.
 
     PYTHONPATH=src python examples/serve_splitplace.py --arch stablelm-1.6b
 """
@@ -48,16 +49,18 @@ def main():
     s = eng.summary()
     print("summary:", s)
     if "join_waves" in s:                  # paged continuous-batching path
-        assert s["prefill_calls"] == s["join_waves"], \
-            "every join wave must prefill+commit in exactly one jitted call"
+        assert s["prefill_chunks"] >= s["join_waves"], \
+            "every join wave commits at least one prefill chunk"
         assert s["decoded_tokens"] >= s["decode_dispatches"], \
             "the fused scan must amortize dispatches over tokens"
         assert s["used_blocks"] == 0, \
-            "retired sequences must free their blocks"
-        print(f"paged decode: {s['prefill_calls']} join waves, "
+            "retired sequences must drop all their block references"
+        print(f"paged decode: {s['join_waves']} join waves, "
+              f"{s['prefill_chunks']} prefill chunks, "
               f"{s['decode_dispatches']} scan dispatches for "
               f"{s['decoded_tokens']} decoded tokens "
-              f"(occupancy {s['batch_occupancy']})")
+              f"(occupancy {s['batch_occupancy']}, "
+              f"prefix hit rate {s['prefix_hit_rate']})")
     else:                                  # recurrent mixers: legacy gang
         print(f"legacy decode: {s['prefill_calls']} prefills, "
               f"{s['decode_steps']} decode steps over {s['batches']} batches")

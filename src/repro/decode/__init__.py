@@ -3,25 +3,31 @@
 The serving layer between the placement engine and the model stack:
 
   * ``paged_cache``  — fixed-size physical KV blocks, per-sequence block
-    tables, a free-list ``BlockAllocator`` with per-arm capacity accounting.
-  * ``paged_model``  — the paged attention forward, one-call join
-    (prefill + block commit) and the fused ``lax.scan`` decode loop
+    tables, a refcounted free-list ``BlockAllocator`` (shared blocks,
+    LRU-evictable cached prefixes) and the block-granularity
+    ``PrefixIndex`` behind prompt-head reuse + copy-on-write.
+  * ``paged_model``  — the paged attention forwards: chunked prefill
+    directly into the pool and the fused ``lax.scan`` decode loop
     (~1 jitted dispatch per K tokens).
-  * ``scheduler``    — ``PagedArmScheduler``: EDF in-flight joins at scan
-    boundaries, immediate retirement, occupancy + recompile accounting.
+  * ``scheduler``    — ``PagedArmScheduler``: EDF in-flight joins with
+    prefix-cache hits at scan boundaries, chunked tail prefill interleaved
+    with decode, pressure-driven preemption (spill/resume), immediate
+    retirement, occupancy + recompile accounting.
 
 ``repro.engine.JaxBackend`` drives one ``PagedArmScheduler`` per split arm
 behind the unchanged ``ExecutionBackend`` protocol.
 """
-from repro.decode.paged_cache import (NULL_BLOCK, BlockAllocator,
-                                      commit_prefill, write_slots)
-from repro.decode.paged_model import (make_decode_fn, make_join_fn,
+from repro.decode.paged_cache import (NULL_BLOCK, BlockAllocator, PrefixIndex,
+                                      chunk_write_slots, copy_blocks,
+                                      write_slots)
+from repro.decode.paged_model import (make_decode_fn, make_prefill_chunk_fn,
                                       paged_decode_logits,
                                       supports_paged_decode)
 from repro.decode.scheduler import Lane, PagedArmScheduler
 
 __all__ = [
     "NULL_BLOCK", "BlockAllocator", "Lane", "PagedArmScheduler",
-    "commit_prefill", "make_decode_fn", "make_join_fn",
-    "paged_decode_logits", "supports_paged_decode", "write_slots",
+    "PrefixIndex", "chunk_write_slots", "copy_blocks", "make_decode_fn",
+    "make_prefill_chunk_fn", "paged_decode_logits", "supports_paged_decode",
+    "write_slots",
 ]

@@ -1,4 +1,4 @@
-"""Paged KV-cache management: block allocator + pool commit/write helpers.
+"""Paged KV-cache management: refcounted block allocator + prefix index.
 
 The dense per-batch ``cache_len`` buffers of the legacy serving path become a
 pool of ``num_blocks`` fixed-size physical blocks per attention layer.  A
@@ -6,6 +6,22 @@ sequence owns a *block table* — logical block j of the sequence maps to
 physical block ``table[j]`` — so sequences of different lengths share one
 pool with no per-batch reallocation, and a finished sequence's blocks return
 to the free list immediately (the capacity lever behind in-flight joins).
+
+PR 4 makes the pool a *shared* cache:
+
+  * physical blocks are **refcounted** — ``share`` lets a new sequence map
+    the cached head of its prompt onto blocks another sequence (live or
+    retired) already filled, and ``free`` only recycles a block when its last
+    reference drops;
+  * a retired block whose token content is registered in the
+    :class:`PrefixIndex` is not returned to the free list — it parks on an
+    LRU *evictable* list, still matchable, and is reclaimed lazily when
+    ``alloc`` runs out of never-used blocks (pressure evicts cold prefixes
+    first);
+  * the :class:`PrefixIndex` hashes token-id chunks at block granularity
+    into parent-chained keys, so ``match`` finds the longest cached chain of
+    full blocks — plus an optional *partial* match of the first divergent
+    block, which the scheduler resolves with a copy-on-write block copy.
 
 Physical block 0 is reserved as the *null block*: padded block-table entries
 and the write slots of inactive batch lanes all point there.  Null-block
@@ -20,7 +36,8 @@ carry over unchanged.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,86 +47,225 @@ NULL_BLOCK = 0
 
 
 class BlockAllocator:
-    """Free-list allocator over the physical block pool of one arm.
+    """Refcounted free-list allocator over the physical block pool of one arm.
 
     Pure host-side bookkeeping (device arrays never see the free list).
     Invariants, property-tested in tests/test_decode.py: a block is never
-    handed out twice while live, every freed block becomes allocatable again,
-    and ``NULL_BLOCK`` is never handed out at all.
+    handed out twice while live, every fully-dereferenced block becomes
+    allocatable again, ``NULL_BLOCK`` is never handed out (nor freeable), and
+    ``free + evictable + live == num_blocks - 1`` at every step.
+
+    ``on_evict(block, key)`` fires when ``alloc`` reclaims an evictable
+    block, so the prefix index can drop the stale mapping before the block's
+    contents are overwritten.
     """
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int,
+                 on_evict: Optional[Callable[[int, object], None]] = None):
         if num_blocks < 2:
             raise ValueError("need >= 2 blocks (block 0 is the null block)")
         self.num_blocks = num_blocks
         self.block_size = block_size
+        self.on_evict = on_evict
         self._free: List[int] = list(range(num_blocks - 1, NULL_BLOCK, -1))
-        self._live = set()
+        self._ref: Dict[int, int] = {}            # live block -> refcount
+        self._key: Dict[int, object] = {}         # block -> prefix-index key
+        self._evictable: "OrderedDict[int, object]" = OrderedDict()
 
     @property
     def free_blocks(self) -> int:
         return len(self._free)
 
     @property
+    def evictable_blocks(self) -> int:
+        return len(self._evictable)
+
+    @property
+    def available_blocks(self) -> int:
+        """Blocks an all-or-nothing ``alloc`` could hand out right now."""
+        return len(self._free) + len(self._evictable)
+
+    @property
     def used_blocks(self) -> int:
-        return len(self._live)
+        return len(self._ref)
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
 
     def can_alloc(self, n: int) -> bool:
-        return n <= len(self._free)
+        return n <= self.available_blocks
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop n blocks, or None (and no side effect) if the pool is short."""
-        if n > len(self._free):
+        """Pop n fresh blocks (refcount 1 each), or None with NO side effect
+        (no partial pops, no evictions) if the pool cannot cover all n.
+        Never-used blocks go first; under shortage the least-recently-parked
+        evictable blocks are reclaimed, dropping their prefix-index entries
+        via ``on_evict``."""
+        if n > self.available_blocks:
             return None
-        ids = [self._free.pop() for _ in range(n)]
-        self._live.update(ids)
+        ids: List[int] = []
+        for _ in range(n):
+            if self._free:
+                b = self._free.pop()
+            else:
+                b, key = self._evictable.popitem(last=False)   # LRU first
+                del self._key[b]
+                if self.on_evict is not None:
+                    self.on_evict(b, key)
+            self._ref[b] = 1
+            ids.append(b)
         return ids
 
+    def share(self, ids: Sequence[int]) -> None:
+        """Take a reference on cached blocks (a prefix hit).  Live blocks
+        gain a reference; evictable blocks resurrect (keeping their index
+        key).  Sharing a free/unknown block is an error — its contents are
+        not a cached prefix."""
+        for b in ids:
+            if b in self._ref:
+                self._ref[b] += 1
+            elif b in self._evictable:
+                del self._evictable[b]
+                self._ref[b] = 1
+            else:
+                raise ValueError(f"share of non-cached block {b}")
+
     def free(self, ids: Sequence[int]) -> None:
-        for i in ids:
-            if i not in self._live:
-                raise ValueError(f"double free / foreign block {i}")
-            self._live.remove(i)
-            self._free.append(i)
+        """Drop one reference per id.  A block whose last reference drops
+        parks on the evictable LRU if its content is registered in the
+        prefix index, else returns to the free list.  Freeing the null
+        block, a free block, or more references than were taken raises."""
+        for b in ids:
+            if b == NULL_BLOCK:
+                raise ValueError("free of the reserved null block")
+            if b not in self._ref:
+                raise ValueError(f"double free / foreign block {b}")
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                if b in self._key:
+                    self._evictable[b] = self._key[b]      # parked as MRU
+                else:
+                    self._free.append(b)
+
+    def register(self, block: int, key: object) -> None:
+        """Attach a prefix-index key to a LIVE block: when its last
+        reference drops it becomes evictable cache instead of free."""
+        if block not in self._ref:
+            raise ValueError(f"register of non-live block {block}")
+        self._key[block] = key
 
     def blocks_for(self, n_tokens: int) -> int:
         """Physical blocks needed to hold n_tokens cache slots."""
         return -(-n_tokens // self.block_size)
 
 
-def commit_prefill(pool, dense_cache, block_ids: jax.Array):
-    """Scatter a dense prefill cache into the paged pool (jit-friendly).
+class PrefixIndex:
+    """Block-granularity prefix cache over token-id chunks.
 
-    ``dense_cache`` leaves: [..., B, S, K, hd] (the temporary per-wave dense
-    cache ``Model.prefill_cache`` wrote into); ``pool`` leaves:
-    [..., P, bs, K, hd]; ``block_ids``: [B, S // bs] int32 physical ids per
-    logical prompt block (entries past a sequence's allocation = NULL_BLOCK,
-    whose contents are never attended).  The leading ``...`` prefix dims
-    (superblock stack, semantic branches) must match between the two trees.
+    A cached sequence is a chain of keys ``key_j = (key_{j-1}, chunk_j)``
+    where ``chunk_j`` is the tuple of ``block_size`` token ids filling
+    logical block j (root parent is ``None``).  ``match`` walks the chain
+    greedily; ``insert`` registers a retired/preempted lane's full blocks.
 
-    Distinct live sequences own distinct physical blocks, so the scatter has
-    no colliding indices except on the null block, where last-write-wins
-    garbage is fine.
+    The exact nested-tuple keys double as hashes (no collision handling
+    needed at this scale) and the child map per parent is what enables the
+    *partial* tail match: a cached block whose first R < block_size tokens
+    equal the prompt's remaining tail can be copy-on-write-mapped, saving R
+    prefill tokens at the cost of one block copy.
     """
-    ids_flat = block_ids.reshape(-1)                        # [B*nb]
 
-    def leaf(pool_leaf, dense_leaf):
-        p, bs = pool_leaf.shape[-4:-2]
-        b, s = dense_leaf.shape[-4:-2]
-        nb = s // bs
-        assert nb * bs == s, "prefill pad length must be a block multiple"
-        prefix = pool_leaf.shape[:-4]
-        pool2 = pool_leaf.reshape((-1,) + pool_leaf.shape[-4:])
-        dense2 = dense_leaf.reshape((-1,) + dense_leaf.shape[-4:])
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        # parent key -> {chunk tuple -> physical block}
+        self._children: Dict[object, Dict[Tuple[int, ...], int]] = {}
 
-        def one(pl_, dn):
-            blocks = dn.reshape((b * nb, bs) + dn.shape[-2:])
-            return pl_.at[ids_flat].set(blocks.astype(pl_.dtype))
+    def __len__(self) -> int:
+        return sum(len(c) for c in self._children.values())
 
-        out = jax.vmap(one)(pool2, dense2)
-        return out.reshape(prefix + pool_leaf.shape[-4:])
+    def match(self, tokens) -> Tuple[List[int], Optional[Tuple[int, int]]]:
+        """Longest cached head of ``tokens``.
 
-    return jax.tree.map(leaf, pool, dense_cache)
+        Returns ``(full_blocks, tail)``: ``full_blocks`` are chain blocks
+        whose whole content is a prompt prefix (share these); ``tail`` is
+        ``(block, R)`` when a child block's first ``R`` tokens extend the
+        match partially (copy-on-write this one), else None.  At least one
+        token is always left uncovered so the tail prefill produces the
+        last-position logits that seed decoding.
+        """
+        bs = self.block_size
+        toks = [int(t) for t in tokens]
+        full: List[int] = []
+        parent = None
+        pos = 0
+        # full blocks: stop before covering the whole prompt (leave >= 1)
+        while pos + bs < len(toks):
+            chunk = tuple(toks[pos:pos + bs])
+            child = self._children.get(parent, {}).get(chunk)
+            if child is None:
+                break
+            key = (parent, chunk)
+            full.append(child)
+            parent = key
+            pos += bs
+        # partial tail: best common-prefix child of the last matched key
+        rem = toks[pos:]
+        cap = len(rem) - 1                       # leave >= 1 token uncovered
+        best_r, best_b = 0, None
+        for chunk, block in self._children.get(parent, {}).items():
+            r = 0
+            for a, b in zip(chunk, rem[:cap]):
+                if a != b:
+                    break
+                r += 1
+            if r > best_r:
+                best_r, best_b = r, block
+        # best_r < bs always: a child matching a full bs tokens of rem would
+        # have been taken by the full-block loop above (same children dict)
+        if best_r > 0:
+            return full, (best_b, best_r)
+        return full, None
+
+    def insert(self, tokens, block_ids: Sequence[int],
+               alloc: BlockAllocator) -> int:
+        """Register the full blocks of a committed token history.  Chunks
+        already present keep their existing block (the newcomer's duplicate
+        frees normally — no key, so it returns to the free list).  Returns
+        the number of newly registered blocks."""
+        bs = self.block_size
+        toks = [int(t) for t in tokens]
+        parent = None
+        added = 0
+        for j in range(len(toks) // bs):
+            chunk = tuple(toks[j * bs:(j + 1) * bs])
+            key = (parent, chunk)
+            kids = self._children.setdefault(parent, {})
+            if chunk not in kids:
+                kids[chunk] = block_ids[j]
+                alloc.register(block_ids[j], key)
+                added += 1
+            parent = key
+        return added
+
+    def drop(self, key: object) -> None:
+        """Forget one mapping (its block is being reclaimed)."""
+        parent, chunk = key
+        kids = self._children.get(parent)
+        if kids is not None:
+            kids.pop(chunk, None)
+            if not kids:
+                del self._children[parent]
+
+
+def copy_blocks(pool, src: jax.Array, dst: jax.Array):
+    """Copy physical blocks ``dst[i] := src[i]`` in every pool leaf — the
+    copy-on-write resolve for a partially matched block.  ``src``/``dst``:
+    [n] int32; padded pairs point both ids at the null scratch block."""
+    def leaf(x):
+        # x: [..., P, bs, K, hd] — the physical axis is -4
+        return x.at[..., dst, :, :, :].set(x[..., src, :, :, :])
+
+    return jax.tree.map(leaf, pool)
 
 
 def write_slots(lengths: jax.Array, block_tables: jax.Array,
@@ -119,8 +275,9 @@ def write_slots(lengths: jax.Array, block_tables: jax.Array,
     ``lengths``: [B] tokens already in cache (the write position);
     ``block_tables``: [B, NB]; ``active``: [B] bool.  Inactive lanes route to
     the null block so the jitted decode scan issues one unconditional
-    scatter.  Distinct active lanes own distinct blocks, so the scatter never
-    collides except on the null scratch block.
+    scatter.  Distinct active lanes own distinct write blocks (shared prefix
+    blocks are never write targets), so the scatter never collides except on
+    the null scratch block.
     """
     b = lengths.shape[0]
     logical = lengths // block_size
@@ -129,4 +286,22 @@ def write_slots(lengths: jax.Array, block_tables: jax.Array,
     wo = lengths % block_size
     wb = jnp.where(active, wb, NULL_BLOCK)
     wo = jnp.where(active, wo, 0)
+    return wb.astype(jnp.int32), wo.astype(jnp.int32)
+
+
+def chunk_write_slots(starts: jax.Array, n_tok: jax.Array,
+                      block_tables: jax.Array, block_size: int, chunk: int):
+    """Per-token write slots for one prefill chunk.
+
+    ``starts``: [B] absolute position of each lane's first chunk token;
+    ``n_tok``: [B] valid tokens this chunk (<= chunk); padded token slots
+    and idle lanes route to the null block.  Returns (wb, wo): [B, chunk].
+    """
+    b = starts.shape[0]
+    pos = starts[:, None] + jnp.arange(chunk)[None, :]        # [B, C]
+    valid = jnp.arange(chunk)[None, :] < n_tok[:, None]
+    logical = jnp.clip(pos // block_size, 0, block_tables.shape[1] - 1)
+    wb = jnp.take_along_axis(block_tables, logical, axis=1)
+    wb = jnp.where(valid, wb, NULL_BLOCK)
+    wo = jnp.where(valid, pos % block_size, 0)
     return wb.astype(jnp.int32), wo.astype(jnp.int32)

@@ -1,12 +1,18 @@
-"""Paged decode forward passes + the fused multi-token scan decode loop.
+"""Paged decode forward passes: chunked prefill + the fused scan decode loop.
 
 Three jit-friendly builders over a ``repro.models`` model (single-branch
 ``Model`` or the paper's ``SemanticModel``):
 
-``make_join_fn``    one jitted call per join wave: dense batched prefill
-                    (``Model.prefill_cache`` — the join entry point) into a
-                    temporary wave-local dense cache, then a block scatter
-                    (``commit_prefill``) into the arm's physical pool.
+``make_prefill_chunk_fn``  one jitted call commits up to ``chunk`` prompt
+                    tokens per prefilling lane *directly into the paged
+                    pool*: per layer the chunk's K/V scatter to their block
+                    slots, then the queries attend through the block table —
+                    over the cached prefix (prefix-sharing hits included)
+                    and the in-chunk causal triangle in one mask.  Long
+                    uncached tails commit chunk by chunk, interleaved with
+                    decode dispatches, instead of one monolithic prefill
+                    (this replaced PR 3's dense ``prefill_cache`` + block
+                    scatter join path).
 ``make_decode_fn``  the fused decode loop: ``lax.scan`` over K tokens, so
                     decode costs ONE jitted dispatch per K tokens instead of
                     one per token.  Per-lane ``remaining`` masks retire lanes
@@ -16,10 +22,14 @@ Three jit-friendly builders over a ``repro.models`` model (single-branch
 ``paged_decode_logits``  a single paged decode step (used by the scan body
                     and directly by parity tests).
 
-The paged attention itself dispatches to the Pallas
+The paged decode attention dispatches to the Pallas
 ``paged_decode_attention`` kernel on TPU backends and to the dense-gather
 XLA reference elsewhere — the same dispatch convention as
-``repro.models.attention``.
+``repro.models.attention``.  Block tables may alias physical blocks across
+lanes (prefix sharing); both attention paths only ever gather through the
+table, so aliasing is read-only.  Chunked prefill uses the XLA gather
+reference everywhere (a Pallas chunk kernel is future work — chunks are
+short and amortized across the wave).
 """
 from __future__ import annotations
 
@@ -27,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.decode.paged_cache import commit_prefill, write_slots
+from repro.decode.paged_cache import chunk_write_slots, write_slots
 from repro.kernels import ref
 from repro.kernels.paged_decode_attention import paged_decode_attention
 from repro.models import layers as L
@@ -70,6 +80,51 @@ def _paged_attn(params, x, cfg: ArchConfig, *, positions, pool, block_tables,
     return out, {"k": pk, "v": pv}
 
 
+def _paged_chunk_attn(params, x, cfg: ArchConfig, *, positions, pool,
+                      block_tables, wb, wo):
+    """Chunk GQA attention against the paged pool: scatter the chunk's K/V
+    into their (wb, wo) slots, then attend through the block table with the
+    absolute-position causal mask (cached prefix + in-chunk triangle)."""
+    b, s, _ = x.shape                       # s == chunk
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (x @ params["wk"]).reshape(b, s, kv, hd)
+    v = (x @ params["wv"]).reshape(b, s, kv, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    pk = pool["k"].at[wb, wo].set(k.astype(pool["k"].dtype))
+    pv = pool["v"].at[wb, wo].set(v.astype(pool["v"].dtype))
+    out = ref.paged_prefill_attention_ref(q, pk, pv, block_tables, positions,
+                                          softcap=cfg.attn_softcap)
+    out = out.reshape(b, s, h * hd) @ params["wo"]
+    return out, {"k": pk, "v": pv}
+
+
+def _stack_body(cfg: ArchConfig, h, sb_params, sb_pool, attn_fn):
+    """One superblock of the paged forward; ``attn_fn(blk_params, hn,
+    sb_pool_entry)`` returns (mix_out, new_pool_entry)."""
+    new_sb_pool = {}
+    for i, (mixer, ffn) in enumerate(cfg.pattern):
+        assert mixer == "attn", "paged decode requires global attention"
+        blk = sb_params[f"pos{i}"]
+        hn = L.norm_apply(blk["mix_norm"], h, cfg)
+        out, npool = attn_fn(blk["mix"], hn, sb_pool[f"pos{i}"])
+        if cfg.post_norms:
+            out = L.norm_apply(blk["mix_post_norm"], out, cfg)
+        h = h + out
+        if ffn != "none":
+            hn = L.norm_apply(blk["ffn_norm"], h, cfg)
+            if ffn == "dense":
+                out = L.mlp_apply(blk["ffn"], hn, cfg)
+            else:
+                out, _ = M.moe_apply(blk["ffn"], hn, cfg)
+            if cfg.post_norms:
+                out = L.norm_apply(blk["ffn_post_norm"], out, cfg)
+            h = h + out
+        new_sb_pool[f"pos{i}"] = npool
+    return h, new_sb_pool
+
+
 def _paged_step_one(model: Model, params, pool, tokens, block_tables,
                     lengths, active, *, interpret: bool):
     """Single-branch paged decode step.  tokens: [B, 1]; lengths: [B] tokens
@@ -85,32 +140,43 @@ def _paged_step_one(model: Model, params, pool, tokens, block_tables,
 
     def body(h, xs):
         sb_params, sb_pool = xs
-        new_sb_pool = {}
-        for i, (mixer, ffn) in enumerate(cfg.pattern):
-            assert mixer == "attn", "paged decode requires global attention"
-            blk = sb_params[f"pos{i}"]
-            hn = L.norm_apply(blk["mix_norm"], h, cfg)
-            out, npool = _paged_attn(
-                blk["mix"], hn, cfg, positions=positions,
-                pool=sb_pool[f"pos{i}"], block_tables=block_tables,
-                valid_lens=valid_lens, wb=wb, wo=wo, interpret=interpret)
-            if cfg.post_norms:
-                out = L.norm_apply(blk["mix_post_norm"], out, cfg)
-            h = h + out
-            if ffn != "none":
-                hn = L.norm_apply(blk["ffn_norm"], h, cfg)
-                if ffn == "dense":
-                    out = L.mlp_apply(blk["ffn"], hn, cfg)
-                else:
-                    out, _ = M.moe_apply(blk["ffn"], hn, cfg)
-                if cfg.post_norms:
-                    out = L.norm_apply(blk["ffn_post_norm"], out, cfg)
-                h = h + out
-            new_sb_pool[f"pos{i}"] = npool
-        return h, new_sb_pool
+        attn = lambda p, hn, entry: _paged_attn(
+            p, hn, cfg, positions=positions, pool=entry,
+            block_tables=block_tables, valid_lens=valid_lens, wb=wb, wo=wo,
+            interpret=interpret)
+        return _stack_body(cfg, h, sb_params, sb_pool, attn)
 
     x, new_pool = jax.lax.scan(body, x, (params["blocks"], pool))
     x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.unembed_apply(params["embed"], x, cfg)
+    return logits[:, -1], new_pool
+
+
+def _paged_chunk_one(model: Model, params, pool, tokens, starts, n_tok,
+                     block_tables):
+    """Single-branch chunked prefill: commit ``tokens`` [B, C] at absolute
+    positions ``starts + [0..C)`` into the paged pool and return the logits
+    at each lane's last valid chunk position.  Padded token slots (>= n_tok)
+    write to the null block and their outputs are never read."""
+    cfg = model.cfg
+    block_size = jax.tree.leaves(pool)[0].shape[2]
+    b, c = tokens.shape
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    positions = starts[:, None] + jnp.arange(c)[None, :]
+    wb, wo = chunk_write_slots(starts, n_tok, block_tables, block_size, c)
+
+    def body(h, xs):
+        sb_params, sb_pool = xs
+        attn = lambda p, hn, entry: _paged_chunk_attn(
+            p, hn, cfg, positions=positions, pool=entry,
+            block_tables=block_tables, wb=wb, wo=wo)
+        return _stack_body(cfg, h, sb_params, sb_pool, attn)
+
+    x, new_pool = jax.lax.scan(body, x, (params["blocks"], pool))
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    idx = jnp.clip(n_tok - 1, 0, c - 1)[:, None, None]
+    x = jnp.take_along_axis(x, jnp.broadcast_to(
+        idx, (b, 1, x.shape[2])), axis=1)
     logits = L.unembed_apply(params["embed"], x, cfg)
     return logits[:, -1], new_pool
 
@@ -131,24 +197,31 @@ def paged_decode_logits(model, params, pool, tokens, block_tables, lengths,
 
 
 # ---------------------------------------------------------------- factories
-def make_join_fn(model, *, interpret: bool = False):
-    """(params, pool, toks [W, S_pad], lengths [W], block_ids [W, S_pad/bs])
-    -> ([W, vocab] per-sequence last-prompt-position logits, new_pool).
+def make_prefill_chunk_fn(model):
+    """(params, pool, toks [W, C], starts [W], n_tok [W], block_tables
+    [W, NB]) -> ([W, vocab] last-valid-position logits, new_pool).
 
-    One jitted call per join wave: dense prefill into a temporary wave-local
-    cache via ``Model.prefill_cache`` (the join entry point), then the block
-    scatter into the arm pool.  S_pad must be a block multiple; padded table
-    entries point at the null block.
+    One jitted call per prefill chunk: every prefilling lane commits its next
+    ``n_tok <= C`` uncached prompt tokens into its own blocks, attending to
+    its cached prefix (including prefix-sharing hits in aliased blocks)
+    through the block table.  Lanes whose tail completes this chunk read
+    their first generated token from the returned logits.
     """
-    del interpret  # prefill runs the standard dense stack
+    if isinstance(model, SemanticModel):
+        def chunk(params, pool, toks, starts, n_tok, block_tables):
+            step = lambda p, c: _paged_chunk_one(
+                model.branch, p, c, toks, starts, n_tok, block_tables)
+            logits, new_pool = jax.vmap(step)(params, pool)
+            bb, b, v = logits.shape
+            return (jnp.transpose(logits, (1, 0, 2)).reshape(b, bb * v),
+                    new_pool)
+        return chunk
 
-    def join(params, pool, toks, lengths, block_ids):
-        dense = model.init_cache(toks.shape[0], toks.shape[1])
-        logits, dense = model.prefill_cache(params, dense, toks,
-                                            lengths=lengths)
-        return logits, commit_prefill(pool, dense, block_ids)
+    def chunk(params, pool, toks, starts, n_tok, block_tables):
+        return _paged_chunk_one(model, params, pool, toks, starts, n_tok,
+                                block_tables)
 
-    return join
+    return chunk
 
 
 def make_decode_fn(model, *, scan_tokens: int, interpret: bool = False):

@@ -1,52 +1,73 @@
-"""Continuous-batching scheduler over the paged KV pool of one split arm.
+"""Continuous-batching scheduler over the shared paged KV pool of one arm.
 
 Replaces the legacy gang-scheduled batch (form batch -> prefill -> decode to
 the longest request -> retire all) with persistent decode *lanes*:
 
-  * ``try_join``  admits queued requests into free lanes at a scan boundary
-    (EDF order), allocates their physical blocks, and runs ONE jitted
-    prefill+commit call for the whole join wave — in-flight joins.
-  * ``dispatch``  runs one fused ``lax.scan`` decode call (K tokens per
-    jitted dispatch) across all lanes; lanes that exhaust their token budget
-    mid-scan go inactive and are retired immediately afterwards, returning
-    their blocks to the allocator — no waiting for the batch's longest
-    request.
+  * ``try_join``     admits queued requests into free lanes at a scan
+    boundary (EDF order).  With prefix sharing on, the cached head of each
+    prompt maps onto existing physical blocks (refcount shares; a partially
+    matching block is resolved with one copy-on-write block copy), so only
+    the uncached tail needs prefill.  Under allocator pressure the scheduler
+    *preempts*: latest-deadline victim lanes spill their blocks back to the
+    pool (prompt + generated tokens stay host-side, full blocks stay
+    matchable in the prefix index) instead of the join hard-rejecting.
+  * ``prefill_step`` commits ONE fixed-size chunk of uncached prompt tokens
+    per prefilling lane — one jitted call across the wave — so a long tail
+    never stalls decode for more than a chunk between scans.
+  * ``dispatch``     runs one fused ``lax.scan`` decode call (K tokens per
+    jitted dispatch) across the decoding lanes; lanes that exhaust their
+    budget mid-scan go inactive and are retired immediately afterwards,
+    returning (or prefix-caching) their blocks — no waiting for the batch's
+    longest request.
 
-Compilation is bounded: join waves bucket to (pow2 wave width, block-rounded
-pow2 prompt length) and decode dispatches bucket to pow2 scan lengths; the
-scheduler counts hits/misses per bucket so benchmarks can see recompile
-churn (``compile_stats``).
+Spilled lanes re-enter through ``try_join`` as resume candidates: their
+re-prefill covers prompt + generated-so-far and itself hits the prefix
+cache, so a preemption costs roughly one chunked tail re-prefill.
+
+Compilation is bounded: prefill chunks key on (pow2 wave width, chunk),
+decode dispatches on (pow2 lane width, pow2 scan length), COW copies on the
+pow2 pair count; the scheduler counts hits/misses per bucket so benchmarks
+can see recompile churn (``compile_stats``).
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.decode.paged_cache import NULL_BLOCK, BlockAllocator
-from repro.decode.paged_model import (make_decode_fn, make_join_fn,
+from repro.decode.paged_cache import (NULL_BLOCK, BlockAllocator, PrefixIndex,
+                                      copy_blocks)
+from repro.decode.paged_model import (make_decode_fn, make_prefill_chunk_fn,
                                       supports_paged_decode)
 from repro.engine.types import next_pow2
 
 
 @dataclass
 class Lane:
-    """Host-side record of one in-flight sequence."""
+    """Host-side record of one in-flight (or spilled) sequence."""
     req: object
     enq: float
     join_t: float
     blocks: List[int]
     out: List[int] = field(default_factory=list)
+    n_shared: int = 0            # leading block-table entries from the index
+    preemptions: int = 0
 
     @property
     def deadline(self) -> float:
         base = self.req.arrival_s if self.req.arrival_s is not None \
             else self.enq
         return base + self.req.sla_s
+
+    def history(self) -> np.ndarray:
+        """prompt + generated tokens — position p of the sequence holds
+        ``history()[p]`` (the resume-prefill input after a preemption)."""
+        out = np.asarray(self.out, np.int32)
+        return np.concatenate([np.asarray(self.req.tokens, np.int32), out])
 
 
 class PagedArmScheduler:
@@ -55,7 +76,8 @@ class PagedArmScheduler:
     def __init__(self, model, params, *, n_lanes: int, cache_len: int,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  scan_tokens: int = 8, util_floor: float = 0.5,
-                 interpret: bool = False):
+                 prefill_chunk: int = 32, prefix_sharing: bool = True,
+                 watermark: float = 0.0, interpret: bool = False):
         if not supports_paged_decode(model):
             raise ValueError("model does not support paged decode "
                              "(needs pure global-attention mixers)")
@@ -65,36 +87,46 @@ class PagedArmScheduler:
         self.block_size = block_size
         self.scan_tokens = scan_tokens
         self.util_floor = util_floor
+        self.prefill_chunk = prefill_chunk
+        self.prefix_sharing = prefix_sharing
+        self.watermark = watermark
         self.interpret = interpret
         self.max_blocks = -(-cache_len // block_size)
         if num_blocks is None:
             # full capacity: every lane can hold cache_len tokens, + null
             num_blocks = 1 + n_lanes * self.max_blocks
-        self.alloc = BlockAllocator(num_blocks, block_size)
+        self.index = PrefixIndex(block_size)
+        self.alloc = BlockAllocator(
+            num_blocks, block_size,
+            on_evict=lambda blk, key: self.index.drop(key))
         self.pool = model.init_cache(num_blocks, block_size)
 
         self.block_tables = np.full((n_lanes, self.max_blocks), NULL_BLOCK,
                                     np.int32)
-        self.lengths = np.zeros(n_lanes, np.int32)
-        self.remaining = np.zeros(n_lanes, np.int32)
+        self.lengths = np.zeros(n_lanes, np.int32)      # committed tokens
+        self.prefill_left = np.zeros(n_lanes, np.int32)
+        self.remaining = np.zeros(n_lanes, np.int32)    # decode budget
         self.last_tok = np.zeros(n_lanes, np.int32)
         self.lanes: List[Optional[Lane]] = [None] * n_lanes
+        self._resume: list = []       # (deadline, seq, lane) heap of spills
+        self._rseq = 0
 
-        self._join_fn = make_join_fn(model, interpret=interpret)
-        self._decode_fn = make_decode_fn  # bound per scan bucket below
         self._jitted: Dict[tuple, object] = {}
 
         # instrumentation
         self.join_waves = 0
         self.joined = 0
+        self.prefill_chunks = 0
         self.decode_dispatches = 0
         self.decoded_tokens = 0
         self.lane_steps = 0            # lanes x scan length, all dispatches
         self._active_frac_sum = 0.0   # running mean, not an unbounded list
-        self.compile_stats: Dict[str, int] = {"join_misses": 0,
-                                              "join_hits": 0,
-                                              "decode_misses": 0,
-                                              "decode_hits": 0}
+        self.prefix_hit_tokens = 0
+        self.prefix_query_tokens = 0
+        self.cow_copies = 0
+        self.preemptions = 0
+        self.spilled_blocks = 0
+        self.compile_stats: Dict[str, int] = {}
         self.buckets: Dict[str, int] = {}
 
     # ----------------------------------------------------------- capacity
@@ -117,12 +149,19 @@ class PagedArmScheduler:
     def n_active(self) -> int:
         return sum(l is not None for l in self.lanes)
 
+    @property
+    def backlog(self) -> int:
+        """Seated lanes + spilled lanes awaiting resume."""
+        return self.n_active + len(self._resume)
+
     def earliest_deadline(self) -> Optional[float]:
         live = [l.deadline for l in self.lanes if l is not None]
+        if self._resume:
+            live.append(self._resume[0][0])
         return min(live) if live else None
 
     def has_work(self) -> bool:
-        return self.n_active > 0
+        return self.backlog > 0
 
     def _scan_bucket(self, rems: np.ndarray) -> int:
         """Scan length for this dispatch: the largest pow2 <= scan_tokens
@@ -140,102 +179,244 @@ class PagedArmScheduler:
         return min(best, next_pow2(int(rems.max())))
 
     # --------------------------------------------------------------- jit
-    def _get_jitted(self, kind: str, key: tuple, build):
+    def _get_jitted(self, kind: str, key: tuple, build, donate=(1,)):
         full = (kind,) + key
-        if full in self._jitted:
-            self.compile_stats[f"{kind}_hits"] += 1
-        else:
-            self.compile_stats[f"{kind}_misses"] += 1
-            # the pool (arg 1 of both join and decode) is fully rewritten
-            # every call: donate it so the device never holds two copies.
-            # CPU has no donation support and would warn per call.
-            donate = (1,) if jax.default_backend() != "cpu" else ()
-            self._jitted[full] = jax.jit(build(), donate_argnums=donate)
+        stat = f"{kind}_hits" if full in self._jitted else f"{kind}_misses"
+        self.compile_stats[stat] = self.compile_stats.get(stat, 0) + 1
+        if full not in self._jitted:
+            # the pool is fully rewritten every call: donate it so the
+            # device never holds two copies.  CPU has no donation support
+            # and would warn per call.
+            dn = donate if jax.default_backend() != "cpu" else ()
+            self._jitted[full] = jax.jit(build(), donate_argnums=dn)
         name = f"{kind}:{'x'.join(map(str, key))}"
         self.buckets[name] = self.buckets.get(name, 0) + 1
         return self._jitted[full]
 
+    # ------------------------------------------------------- release/spill
+    def _release(self, li: int, *, register: bool) -> int:
+        """Retire or spill the lane in slot ``li``: register the full blocks
+        of its committed history in the prefix index (so later prompts — and
+        its own resume — hit them), then drop all block references.  Returns
+        the number of references released."""
+        lane = self.lanes[li]
+        written = int(self.lengths[li])
+        if register and self.prefix_sharing and written >= self.block_size:
+            self.index.insert(lane.history()[:written], lane.blocks,
+                              self.alloc)
+        n = len(lane.blocks)
+        if lane.blocks:
+            # park tail-first: LRU eviction then reclaims chain TAILS before
+            # their parents, so the surviving shorter prefix stays matchable
+            # (an evicted parent would orphan still-parked descendants)
+            self.alloc.free(lane.blocks[::-1])
+        lane.blocks = []
+        lane.n_shared = 0
+        self.lanes[li] = None
+        self.block_tables[li] = NULL_BLOCK
+        self.lengths[li] = 0
+        self.prefill_left[li] = 0
+        self.remaining[li] = 0
+        return n
+
+    def _preempt(self, li: int, now: float) -> None:
+        """Spill the lane: blocks go back to the pool (full ones stay
+        matchable), prompt + generated tokens stay host-side, and the lane
+        queues for resume — its re-prefill runs back through the prefix
+        cache."""
+        lane = self.lanes[li]
+        released = self._release(li, register=True)
+        lane.preemptions += 1
+        self.preemptions += 1
+        self.spilled_blocks += released
+        heapq.heappush(self._resume, (lane.deadline, self._rseq, lane))
+        self._rseq += 1
+
+    def _spill_until(self, n_needed: int, deadline: float, now: float) -> None:
+        """Preempt latest-deadline victims until ``n_needed`` blocks (plus
+        the watermark headroom) are available or no strictly-later-deadline
+        victim remains.  Never spills a lane to serve a less urgent one."""
+        reserve = int(self.watermark * (self.alloc.num_blocks - 1))
+        while self.alloc.available_blocks < n_needed + reserve:
+            victims = [(l.deadline, li) for li, l in enumerate(self.lanes)
+                       if l is not None and l.deadline > deadline]
+            if not victims:
+                return
+            self._preempt(max(victims)[1], now)
+
     # -------------------------------------------------------------- joins
-    def try_join(self, queue: list, now: float) -> List[Lane]:
-        """Admit EDF-ordered requests from the arm's heap into free lanes at
-        a scan boundary.  Returns lanes retired at join time (max_new == 1 —
-        their single token comes straight from the prefill logits)."""
+    def try_join(self, queue: list, now: float) -> None:
+        """Admit the most urgent queued/spilled candidates into free lanes
+        at a scan boundary.  Each admission maps its cached prompt head onto
+        shared blocks, resolves at most one copy-on-write block, and
+        allocates private blocks for the rest — spilling later-deadline
+        lanes under pressure.  No model dispatch happens here; the seated
+        lanes prefill chunk-by-chunk via ``prefill_step``."""
         free = [i for i, l in enumerate(self.lanes) if l is None]
-        if not queue or not free:
-            return []
-        # phase 1: pop up to len(free) most-urgent candidates
-        cand = [heapq.heappop(queue)
-                for _ in range(min(len(free), len(queue)))]
-        s_pad = next_pow2(max(len(c[3].tokens) for c in cand))
-        s_pad = -(-s_pad // self.block_size) * self.block_size
-        # phase 2: allocate blocks in EDF order; whoever doesn't fit waits
-        admitted: List[Tuple[tuple, List[int]]] = []
-        for j, item in enumerate(cand):
-            req = item[3]
-            try:
-                # direct callers may not have gone through backend.submit's
-                # validation; an impossible request must raise, not truncate
-                self.validate(req)
-            except ValueError:
-                for _, ids in admitted:
-                    self.alloc.free(ids)
-                for back in cand[:j] + cand[j + 1:]:
-                    heapq.heappush(queue, back)
-                raise
-            need = self.alloc.blocks_for(
-                len(req.tokens) + max(int(req.max_new), 1) - 1)
-            ids = self.alloc.alloc(need)
-            if ids is None:
-                for back in cand[j:]:
-                    heapq.heappush(queue, back)
-                break
-            admitted.append((item, ids))
-        if not admitted:
-            return []
-
-        # phase 3: one jitted prefill+commit for the wave (pow2 wave width)
-        w = len(admitted)
-        w_pad = next_pow2(w)
-        nb_prompt = s_pad // self.block_size
-        toks = np.zeros((w_pad, s_pad), np.int32)
-        lens = np.ones(w_pad, np.int32)
-        ids_arr = np.full((w_pad, nb_prompt), NULL_BLOCK, np.int32)
-        for i, ((_, _, _, req), ids) in enumerate(admitted):
-            toks[i, :len(req.tokens)] = req.tokens
-            lens[i] = len(req.tokens)
-            ids_arr[i, :min(len(ids), nb_prompt)] = ids[:nb_prompt]
-        join = self._get_jitted("join", (w_pad, s_pad),
-                                lambda: self._join_fn)
-        logits, self.pool = join(self.params, self.pool, jnp.asarray(toks),
-                                 jnp.asarray(lens), jnp.asarray(ids_arr))
-        first = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
-        self.join_waves += 1
-        self.joined += w
-
-        # phase 4: seat the lanes (max_new == 1 retires at join)
         seat = iter(free)
-        done: List[Lane] = []
-        for i, ((_, _, enq, req), ids) in enumerate(admitted):
-            lane = Lane(req=req, enq=enq, join_t=now, blocks=ids,
-                        out=[int(first[i])])
-            if req.max_new <= 1:
-                self.alloc.free(ids)
-                lane.blocks = []
-                done.append(lane)
-                continue
+        cow_pairs: List[tuple] = []
+        admitted = 0
+        while admitted < len(free) and (queue or self._resume):
+            use_resume = bool(self._resume) and (
+                not queue or self._resume[0][0] <= queue[0][0])
+            if use_resume:
+                _, _, lane = heapq.heappop(self._resume)
+            else:
+                item = heapq.heappop(queue)
+                _, _, enq, req = item
+                # direct callers may not have gone through backend.submit's
+                # validation; an impossible request must raise, not wedge —
+                # but earlier admissions of this wave may have COW copies
+                # pending, and their lanes already count the copied tokens
+                # as cached: flush before propagating
+                try:
+                    self.validate(req)
+                except ValueError:
+                    self._flush_cow(cow_pairs)
+                    raise
+                lane = Lane(req=req, enq=enq, join_t=now, blocks=[])
+            req = lane.req
+            seq_toks = lane.history()
+            total_need = self.alloc.blocks_for(
+                len(req.tokens) + max(int(req.max_new), 1) - 1)
+            shared: List[int] = []
+            cow = None
+            if self.prefix_sharing:
+                shared, cow = self.index.match(seq_toks)
+            if shared:
+                self.alloc.share(shared)
+            if cow is not None:
+                # pin the COW source so allocating this lane's private
+                # blocks cannot evict it before the copy runs
+                self.alloc.share([cow[0]])
+            n_alloc = total_need - len(shared)
+            # watermark reserve makes pressure PROACTIVE: spilling starts
+            # once an admission would eat into the headroom fraction, not
+            # only after the pool is already exhausted
+            reserve = int(self.watermark * (self.alloc.num_blocks - 1))
+            if self.alloc.available_blocks < n_alloc + reserve:
+                self._spill_until(n_alloc, lane.deadline, now)
+            ids = self.alloc.alloc(n_alloc)
+            if ids is None and cow is not None:
+                # borderline pool: drop the COW pin and retry without it
+                self.alloc.free([cow[0]])
+                cow = None
+                self._spill_until(n_alloc, lane.deadline, now)
+                ids = self.alloc.alloc(n_alloc)
+            if ids is None:
+                # pool exhausted and every seated lane is more urgent: the
+                # candidate waits (blocks drain as lanes retire) — admission
+                # never hard-rejects
+                if shared:
+                    self.alloc.free(shared)
+                if use_resume:
+                    heapq.heappush(self._resume,
+                                   (lane.deadline, self._rseq, lane))
+                    self._rseq += 1
+                else:
+                    heapq.heappush(queue, item)
+                break
+            covered = len(shared) * self.block_size
+            if cow is not None:
+                src, keep = cow
+                cow_pairs.append((src, ids[0]))
+                covered += keep
+            lane.blocks = shared + ids
+            lane.n_shared = len(shared)
             li = next(seat)
             self.lanes[li] = lane
             row = np.full(self.max_blocks, NULL_BLOCK, np.int32)
-            row[:len(ids)] = ids
+            row[:len(lane.blocks)] = lane.blocks
             self.block_tables[li] = row
-            self.lengths[li] = len(req.tokens)
-            self.remaining[li] = int(req.max_new) - 1
-            self.last_tok[li] = first[i]
-        return done
+            self.lengths[li] = covered
+            self.prefill_left[li] = len(seq_toks) - covered
+            self.remaining[li] = 0
+            self.prefix_hit_tokens += covered
+            self.prefix_query_tokens += len(seq_toks)
+            admitted += 1
+
+        self._flush_cow(cow_pairs)
+        if admitted:
+            self.join_waves += 1
+            self.joined += admitted
+
+    def _flush_cow(self, cow_pairs: List[tuple]) -> None:
+        """Run the wave's pending copy-on-write block copies (one jitted,
+        pow2-bucketed call) and release the pinned source references."""
+        if not cow_pairs:
+            return
+        n_pad = next_pow2(len(cow_pairs))
+        src = np.full(n_pad, NULL_BLOCK, np.int32)
+        dst = np.full(n_pad, NULL_BLOCK, np.int32)
+        for i, (s, d) in enumerate(cow_pairs):
+            src[i], dst[i] = s, d
+        fn = self._get_jitted("cow", (n_pad,),
+                              lambda: copy_blocks, donate=(0,))
+        self.pool = fn(self.pool, jnp.asarray(src), jnp.asarray(dst))
+        self.cow_copies += len(cow_pairs)
+        # copies done — the pinned sources can go back to the cache
+        self.alloc.free([s for s, _ in cow_pairs])
+        cow_pairs.clear()
+
+    # ------------------------------------------------------------ prefill
+    def prefill_step(self, now: float) -> List[Lane]:
+        """Commit ONE chunk of uncached prompt tokens for every prefilling
+        lane (one jitted call, pow2 wave width).  Lanes whose tail completes
+        read their first generated token from the chunk logits; a lane whose
+        budget is already spent (max_new covered by resume history, or
+        max_new == 1) retires here.  Returns the retired lanes."""
+        pf = [i for i, l in enumerate(self.lanes)
+              if l is not None and self.prefill_left[i] > 0]
+        if not pf:
+            return []
+        w = next_pow2(len(pf))
+        # chunk length buckets to the widest lane's need (pow2, capped at
+        # prefill_chunk) — prefix-cache hits leave short tails, and an
+        # 8-token tail must not pay a chunk-wide dispatch
+        c = min(self.prefill_chunk,
+                next_pow2(int(min(np.max(self.prefill_left[pf]),
+                                  self.prefill_chunk))))
+        toks = np.zeros((w, c), np.int32)
+        starts = np.zeros(w, np.int32)
+        n_tok = np.zeros(w, np.int32)
+        bt = np.full((w, self.max_blocks), NULL_BLOCK, np.int32)
+        for row, li in enumerate(pf):
+            lane = self.lanes[li]
+            s0 = int(self.lengths[li])
+            k = min(int(self.prefill_left[li]), c)
+            toks[row, :k] = lane.history()[s0:s0 + k]
+            starts[row] = s0
+            n_tok[row] = k
+            bt[row] = self.block_tables[li]
+        fn = self._get_jitted(
+            "prefill", (w, c), lambda: make_prefill_chunk_fn(self.model))
+        logits, self.pool = fn(self.params, self.pool, jnp.asarray(toks),
+                               jnp.asarray(starts), jnp.asarray(n_tok),
+                               jnp.asarray(bt))
+        first = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+        self.prefill_chunks += 1
+
+        retired: List[Lane] = []
+        for row, li in enumerate(pf):
+            lane = self.lanes[li]
+            k = min(int(self.prefill_left[li]), c)
+            self.lengths[li] += k
+            self.prefill_left[li] -= k
+            if self.prefill_left[li] > 0:
+                continue
+            lane.out.append(int(first[row]))
+            budget = int(lane.req.max_new) - len(lane.out)
+            if budget <= 0:
+                self._release(li, register=True)
+                retired.append(lane)
+            else:
+                self.remaining[li] = budget
+                self.last_tok[li] = first[row]
+        return retired
 
     # ------------------------------------------------------------ dispatch
     def dispatch(self, now: float) -> List[Lane]:
-        """One fused scan decode across the active lanes; retire finished
+        """One fused scan decode across the decoding lanes; retire finished
         lanes.  Returns the retired lanes (callers stamp Outcomes).
 
         Active lanes are compacted into a pow2-width dispatch (empty lanes
@@ -284,11 +465,7 @@ class PagedArmScheduler:
             lane.out.extend(int(t) for t in toks[row, :n_take])
             self.decoded_tokens += n_take
             if self.remaining[i] == 0:
-                self.alloc.free(lane.blocks)
-                lane.blocks = []
-                self.lanes[i] = None
-                self.block_tables[i] = NULL_BLOCK
-                self.lengths[i] = 0
+                self._release(i, register=True)
                 retired.append(lane)
         return retired
 
@@ -303,11 +480,20 @@ class PagedArmScheduler:
         return {
             "join_waves": self.join_waves,
             "joined": self.joined,
+            "prefill_chunks": self.prefill_chunks,
             "decode_dispatches": self.decode_dispatches,
             "decoded_tokens": self.decoded_tokens,
             "batch_occupancy": round(occ, 4),
             "mean_active_lanes": round(act, 4),
             "free_blocks": self.alloc.free_blocks,
             "used_blocks": self.alloc.used_blocks,
+            "evictable_blocks": self.alloc.evictable_blocks,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_query_tokens": self.prefix_query_tokens,
+            "prefix_hit_rate": round(
+                self.prefix_hit_tokens / max(self.prefix_query_tokens, 1), 4),
+            "cow_copies": self.cow_copies,
+            "preemptions": self.preemptions,
+            "spilled_blocks": self.spilled_blocks,
             **{f"compile_{k}": v for k, v in self.compile_stats.items()},
         }

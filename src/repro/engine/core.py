@@ -104,6 +104,12 @@ class PlacementEngine:
     def summary(self) -> dict:
         s = self.stats.summary()
         extra = dict(self.backend.extra_metrics())
+        # mirror the shared paged-cache counters into the stats schema so
+        # policy/benchmark code can read them off EngineStats directly
+        for f in ("prefix_hit_rate", "cow_copies", "preemptions",
+                  "spilled_blocks"):
+            if f in extra:
+                setattr(self.stats, f, extra[f])
         sched = self.decide_time_s + extra.pop("place_time_s", 0.0)
         s.update(extra)
         s["sched_time_s"] = round(sched, 4)

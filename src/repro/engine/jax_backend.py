@@ -5,19 +5,24 @@ Wraps the ``repro.dist`` runners (LAYER -> "pipeline", SEMANTIC ->
 decode paths per arm:
 
   * **paged** (default for pure-attention models): a ``repro.decode``
-    ``PagedArmScheduler`` per arm — paged KV blocks, EDF in-flight joins at
-    scan boundaries, and a fused ``lax.scan`` decode loop that costs ~1
-    jitted dispatch per ``scan_tokens`` tokens.  Short requests retire the
-    moment their budget is spent; they never wait for the batch's longest
-    request.
+    ``PagedArmScheduler`` per arm — a *shared* paged KV pool (prefix-cache
+    hits map common prompt heads onto refcounted blocks, with copy-on-write
+    for partially matching blocks), EDF in-flight joins at scan boundaries,
+    chunked tail prefill interleaved with the fused ``lax.scan`` decode
+    loop (~1 jitted dispatch per ``scan_tokens`` tokens), and
+    pressure-driven preemption (latest-deadline lanes spill their blocks
+    and resume through the prefix cache instead of the pool hard-rejecting
+    admissions).  Short requests retire the moment their budget is spent;
+    they never wait for the batch's longest request.
   * **legacy** (recurrent mixers, or ``decode="legacy"``): rigid
     gang-scheduled EDF batches — one batched prefill
     (``runner.prefill_into_cache``) then one jitted decode call per token.
 
 Latency is the true per-request figure: queue wait (admission -> join /
 batch formation) + execution.  ``extra_metrics`` reports dispatch counters,
-steady-state batch occupancy, per-arm block-pool accounting, and
-prefill-bucket compilation hits/misses (recompile churn is visible, not
+steady-state batch occupancy, per-arm block-pool accounting (incl.
+``prefix_hit_rate``, ``cow_copies``, ``preemptions``, ``spilled_blocks``),
+and compilation hits/misses per bucket (recompile churn is visible, not
 silent).
 """
 from __future__ import annotations
@@ -43,7 +48,9 @@ class JaxBackend:
                  max_batch: int = 8, seed: int = 0,
                  arms=(LAYER, SEMANTIC), decode: str = "auto",
                  scan_tokens: int = 8, block_size: int = 16,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 prefill_chunk: int = 32, prefix_sharing: bool = True,
+                 watermark: float = 0.0):
         if decode not in ("auto", "paged", "legacy"):
             raise ValueError(f"decode={decode!r}; expected auto|paged|legacy")
         self.cfg = cfg
@@ -54,6 +61,9 @@ class JaxBackend:
         self.scan_tokens = scan_tokens
         self.block_size = min(block_size, cache_len)
         self.num_blocks = num_blocks
+        self.prefill_chunk = prefill_chunk
+        self.prefix_sharing = prefix_sharing
+        self.watermark = watermark
         self._init_key = jax.random.PRNGKey(seed + 1)
         self.runners: Dict[int, object] = {}
         self.params: Dict[int, object] = {}
@@ -102,7 +112,10 @@ class JaxBackend:
             self._paged[arm] = PagedArmScheduler(
                 r.model, self.params[arm], n_lanes=self.max_batch,
                 cache_len=self.cache_len, block_size=self.block_size,
-                num_blocks=self.num_blocks, scan_tokens=self.scan_tokens)
+                num_blocks=self.num_blocks, scan_tokens=self.scan_tokens,
+                prefill_chunk=self.prefill_chunk,
+                prefix_sharing=self.prefix_sharing,
+                watermark=self.watermark)
 
     # ------------------------------------------------------------- lifecycle
     @property
@@ -111,7 +124,7 @@ class JaxBackend:
 
     def pending(self) -> int:
         queued = sum(len(q) for q in self._queues.values())
-        in_flight = sum(s.n_active for s in self._paged.values())
+        in_flight = sum(s.backlog for s in self._paged.values())
         return queued + in_flight
 
     def submit(self, req: Request) -> None:
@@ -155,24 +168,28 @@ class JaxBackend:
 
     @property
     def prefill_calls(self) -> int:
-        """Batched prefill dispatches: legacy gang prefills + join waves
-        (every join wave is exactly one prefill+commit call)."""
-        return self._legacy_prefills + sum(s.join_waves
+        """Batched prefill dispatches: legacy gang prefills + paged prefill
+        chunk calls (each commits one chunk for the whole prefilling wave)."""
+        return self._legacy_prefills + sum(s.prefill_chunks
                                            for s in self._paged.values())
 
     # ----------------------------------------------------- paged decode path
     def _step_paged(self, arm: int) -> List[Outcome]:
-        """One scan boundary: join queued requests into free lanes, run one
-        fused decode dispatch, retire finished lanes immediately.  Lanes
-        retired at join time (max_new == 1) are stamped BEFORE the decode
-        dispatch — their response time must not absorb an unrelated scan."""
+        """One scan boundary: seat queued/resumed requests into free lanes
+        (prefix-cache hits, COW, preemption under pressure), commit one
+        prefill chunk for the prefilling lanes, run one fused decode
+        dispatch, retire finished lanes immediately.  Lanes retired at
+        prefill completion (max_new == 1 — their single token comes from the
+        chunk logits) are stamped BEFORE the decode dispatch — their
+        response time must not absorb an unrelated scan."""
         sched = self._paged[arm]
-        done = sched.try_join(self._queues[arm], self.now)
-        join_finish = self.now
+        sched.try_join(self._queues[arm], self.now)
+        done = sched.prefill_step(self.now)
+        prefill_finish = self.now
         outcomes = [
             self._outcome(lane.req, arm, lane.enq, lane.join_t,
                           np.asarray(lane.out[:lane.req.max_new], np.int32),
-                          join_finish)
+                          prefill_finish)
             for lane in done]
         retired = sched.dispatch(self.now)
         finish = self.now
@@ -276,12 +293,18 @@ class JaxBackend:
             agg: Dict[str, float] = {}
             for sched in self._paged.values():
                 for k, v in sched.stats().items():
-                    if k in ("batch_occupancy", "mean_active_lanes"):
+                    if k in ("batch_occupancy", "mean_active_lanes",
+                             "prefix_hit_rate"):
                         continue
                     agg[k] = agg.get(k, 0) + v
             tokens = sum(s.decoded_tokens for s in self._paged.values())
             steps = sum(s.lane_steps for s in self._paged.values())
             agg["batch_occupancy"] = round(tokens / max(steps, 1), 4)
+            # token-weighted across arms: cached prompt tokens / prompt
+            # tokens that joins would otherwise have had to prefill
+            agg["prefix_hit_rate"] = round(
+                agg.get("prefix_hit_tokens", 0)
+                / max(agg.get("prefix_query_tokens", 0), 1), 4)
             m.update(agg)
         elif self._legacy_lane_steps:
             m["batch_occupancy"] = round(

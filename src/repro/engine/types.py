@@ -115,7 +115,13 @@ class Outcome:
 
 @dataclass
 class EngineStats:
-    """The shared metrics schema (paper Table I) both backends produce."""
+    """The shared metrics schema (paper Table I) both backends produce.
+
+    The KV-cache block (``prefix_hit_rate`` .. ``spilled_blocks``) is filled
+    from the serving backend's ``extra_metrics`` when the backend runs the
+    shared paged cache (``repro.decode``); backends without one leave the
+    zeros.
+    """
     completed: int = 0
     violations: int = 0
     per_mode: Dict[str, int] = field(default_factory=dict)
@@ -124,6 +130,11 @@ class EngineStats:
     queue_waits: List[float] = field(default_factory=list)
     accuracies: List[float] = field(default_factory=list)
     decisions: List[int] = field(default_factory=list)
+    # shared paged-KV cache counters (JaxBackend paged decode path)
+    prefix_hit_rate: float = 0.0
+    cow_copies: int = 0
+    preemptions: int = 0
+    spilled_blocks: int = 0
 
     def record(self, o: Outcome) -> None:
         self.completed += 1

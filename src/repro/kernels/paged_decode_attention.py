@@ -12,6 +12,11 @@ physical block is read ONCE per kv head.  Blocks past the sequence's fill
 level are skipped entirely; partial tail blocks are masked via ``lengths``.
 Block id 0 is the allocator's reserved null block: padded table entries point
 there and are never attended (they sit beyond the fill level).
+
+With prefix sharing (PR 4) block tables of different lanes may ALIAS the
+same physical block (a shared prompt head).  The kernel only ever gathers
+through the table — the pool refs are read-only — so aliasing needs no
+special handling; tests cover aliased tables against the dense reference.
 """
 from __future__ import annotations
 

@@ -89,7 +89,8 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
     block_tables: [B, NB] int32 (entry 0 = reserved null block);
     lengths: [B] valid token count per sequence.  Gathers each sequence's
     blocks into a dense [B, NB*bs, K, hd] cache and defers to
-    ``decode_attention_ref``.
+    ``decode_attention_ref``.  Tables of different sequences may alias the
+    same physical blocks (prefix sharing) — the gather is read-only.
     """
     k = k_pool[block_tables]                    # [B, NB, bs, K, hd]
     v = v_pool[block_tables]
@@ -97,3 +98,38 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
     k = k.reshape(b, nb * bs, kh, hd)
     v = v.reshape(b, nb * bs, kh, hd)
     return decode_attention_ref(q, k, v, lengths, softcap=softcap)
+
+
+def paged_prefill_attention_ref(q, k_pool, v_pool, block_tables, positions, *,
+                                softcap=0.0):
+    """Chunked-prefill attention against the paged pool (XLA path).
+
+    q: [B, C, H, hd] — one chunk of C query tokens per lane at absolute
+    positions ``positions`` [B, C]; k/v_pool: [P, bs, K, hd] pools that
+    ALREADY contain this chunk's K/V (the caller scatters before attending);
+    block_tables: [B, NB].  The gathered dense cache is in absolute position
+    order (logical block j covers positions [j*bs, (j+1)*bs)), so the causal
+    rule is just ``kpos <= qpos`` — it spans the cached prefix AND the
+    in-chunk causal triangle in one mask.  Returns [B, C, H, hd]; rows of
+    padded query slots are garbage (their writes routed to the null block
+    and their outputs are never read).
+    """
+    kd = k_pool[block_tables]                   # [B, NB, bs, K, hd]
+    vd = v_pool[block_tables]
+    b, nb, bs, kh, hd = kd.shape
+    kd = kd.reshape(b, nb * bs, kh, hd)
+    vd = vd.reshape(b, nb * bs, kh, hd)
+    h = q.shape[2]
+    rep = h // kh
+    kd = jnp.repeat(kd, rep, axis=2)
+    vd = jnp.repeat(vd, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kd.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kpos = jnp.arange(nb * bs)[None, None, None, :]
+    mask = kpos <= positions[:, None, :, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      vd.astype(jnp.float32)).astype(q.dtype)

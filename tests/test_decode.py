@@ -1,16 +1,25 @@
-"""repro.decode tests: paged KV-cache + continuous-batching decode.
+"""repro.decode tests: shared paged KV-cache + continuous-batching decode.
 
 Covers the acceptance contract of the paged serving layer:
 
   * the Pallas paged decode-attention kernel matches the dense XLA reference
-    (interpret mode, <= 1e-3),
+    (interpret mode, <= 1e-3), including block tables that ALIAS physical
+    blocks across lanes (prefix sharing is read-only for decode),
   * paged-vs-dense numerical parity (same greedy tokens as the legacy
     gang-scheduled dense-cache path),
   * in-flight join parity (a request joining a busy batch at a scan boundary
     decodes the identical tokens to a solo run),
+  * prefix-cache parity: a request served via prefix hits + chunked tail
+    prefill (including a copy-on-write partial block) produces the identical
+    tokens to the same request served cold, on both arms,
+  * preemption parity: a lane spilled under pressure and resumed through the
+    prefix cache matches its never-preempted run, and a block-pool sized to
+    force pressure never rejects a request,
   * the fused scan loop issues <= 1 jitted dispatch per K >= 8 decode tokens,
-  * the block allocator never double-assigns or leaks under random
-    alloc/free (hypothesis property test),
+  * the refcounted block allocator never double-assigns or leaks under
+    random alloc/share/register/free (hypothesis property test), frees are
+    all-or-nothing accountable, and the null block is never handed out nor
+    freeable,
   * recompile-churn accounting is visible via extra_metrics().
 """
 import heapq
@@ -21,7 +30,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.decode import BlockAllocator, NULL_BLOCK, PagedArmScheduler
+from repro.decode import (BlockAllocator, NULL_BLOCK, PagedArmScheduler,
+                          PrefixIndex)
 from repro.engine import (LAYER, SEMANTIC, FixedPolicy, MABPolicy,
                           PlacementEngine, Request)
 from repro.engine.jax_backend import JaxBackend
@@ -60,38 +70,133 @@ def test_paged_kernel_matches_dense_reference(h, kh, hd, bs, nb):
     np.testing.assert_allclose(np.asarray(exp), np.asarray(exp2), atol=1e-6)
 
 
+def test_paged_kernel_aliased_block_tables():
+    """Prefix sharing makes lanes ALIAS physical blocks: the gather must
+    stay correct when several tables point at the same block (read-only
+    aliasing — the kernel never writes the pool)."""
+    h, kh, hd, bs, nb, b = 4, 2, 32, 4, 3, 3
+    p_blocks = 1 + 4
+    q = jnp.asarray(RNG.normal(size=(b, h, hd)), jnp.float32)
+    kp = jnp.asarray(RNG.normal(size=(p_blocks, bs, kh, hd)), jnp.float32)
+    vp = jnp.asarray(RNG.normal(size=(p_blocks, bs, kh, hd)), jnp.float32)
+    # every lane shares blocks 1,2 (a common prompt head) + its own tail
+    bt = np.asarray([[1, 2, 3], [1, 2, 4], [1, 2, 3]], np.int32)
+    lengths = jnp.asarray([12, 10, 9], jnp.int32)
+
+    out = paged_decode_attention(q, kp, vp, jnp.asarray(bt), lengths,
+                                 interpret=True)
+    k_dense = kp[bt].reshape(b, nb * bs, kh, hd)
+    v_dense = vp[bt].reshape(b, nb * bs, kh, hd)
+    exp = ref.decode_attention_ref(q, k_dense, v_dense, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-3,
+                               rtol=1e-3)
+
+
 # ---------------------------------------------------------------- allocator
 @settings(max_examples=25, deadline=None)
 @given(seed=st.integers(0, 10_000), num_blocks=st.integers(2, 40))
-def test_block_allocator_never_double_assigns_or_leaks(seed, num_blocks):
-    """Random alloc/free interleavings: every live block is unique, the null
-    block is never handed out, frees return capacity exactly."""
+def test_block_allocator_refcounting_never_leaks(seed, num_blocks):
+    """Random alloc/share/register/free interleavings under refcounting:
+    every handed-out block is exclusively fresh, the null block is never
+    handed out, failed allocs are all-or-nothing no-ops, refcounts match the
+    live handles exactly, and free + evictable + live is conserved."""
     rng = np.random.default_rng(seed)
-    alloc = BlockAllocator(num_blocks, block_size=4)
-    live = {}
-    for _ in range(200):
-        if live and rng.random() < 0.45:
-            key = list(live)[int(rng.integers(len(live)))]
-            alloc.free(live.pop(key))
+    dropped = []
+    alloc = BlockAllocator(num_blocks, block_size=4,
+                           on_evict=lambda b, k: dropped.append((b, k)))
+    handles = []      # each entry holds one reference per block id in it
+    total = num_blocks - 1
+    for step in range(250):
+        op = rng.random()
+        if handles and op < 0.35:
+            alloc.free(handles.pop(int(rng.integers(len(handles)))))
+        elif handles and op < 0.55:
+            # a prefix hit: take another reference on live blocks
+            ids = list(handles[int(rng.integers(len(handles)))])
+            alloc.share(ids)
+            handles.append(ids)
+        elif handles and op < 0.65:
+            # register a live block: when dereferenced it parks as
+            # evictable cache instead of returning to the free list
+            ids = handles[int(rng.integers(len(handles)))]
+            alloc.register(ids[int(rng.integers(len(ids)))], ("key", step))
         else:
             n = int(rng.integers(1, max(2, num_blocks // 2)))
+            before = (alloc.free_blocks, alloc.evictable_blocks,
+                      alloc.used_blocks)
             ids = alloc.alloc(n)
             if ids is None:
-                assert n > alloc.free_blocks
+                # all-or-nothing: a failed alloc has NO side effects
+                assert n > alloc.available_blocks
+                assert before == (alloc.free_blocks, alloc.evictable_blocks,
+                                  alloc.used_blocks)
                 continue
-            assert len(ids) == n
+            assert len(ids) == n and len(set(ids)) == n
             assert NULL_BLOCK not in ids
-            flat = [b for blocks in live.values() for b in blocks]
-            assert not set(ids) & set(flat), "double-assigned block"
-            live[len(live) + _ * 1000] = ids
-    held = sum(len(v) for v in live.values())
-    assert alloc.used_blocks == held
-    assert alloc.free_blocks == num_blocks - 1 - held
-    for ids in live.values():
-        alloc.free(ids)
-    assert alloc.free_blocks == num_blocks - 1 and alloc.used_blocks == 0
+            live = [b for hs in handles for b in hs]
+            assert not set(ids) & set(live), "handed out a live block"
+            handles.append(ids)
+        # conservation + exact refcounts after every op
+        assert (alloc.free_blocks + alloc.evictable_blocks
+                + alloc.used_blocks == total)
+        counts = {}
+        for hs in handles:
+            for b in hs:
+                counts[b] = counts.get(b, 0) + 1
+        assert all(alloc.refcount(b) == c for b, c in counts.items())
+    for hs in handles:
+        alloc.free(hs)
+    assert alloc.used_blocks == 0
+    assert alloc.available_blocks == total
     with pytest.raises(ValueError):
-        alloc.free([1])                       # double free is an error
+        alloc.free([NULL_BLOCK])              # the null block is untouchable
+    if total >= 1:
+        with pytest.raises(ValueError):
+            alloc.free([1])                   # double free is an error
+    fresh = BlockAllocator(3, block_size=4)
+    with pytest.raises(ValueError):
+        fresh.share([1])                      # sharing a free block is too
+
+
+def test_allocator_shared_block_double_free_guard():
+    """A shared block survives its first free (refcount) and a registered
+    block parks as evictable, resurrectable by share; over-freeing raises."""
+    alloc = BlockAllocator(6, block_size=4)
+    ids = alloc.alloc(2)
+    alloc.share(ids)                          # second owner
+    alloc.free(ids)                           # first owner drops
+    assert alloc.used_blocks == 2             # still live via the share
+    alloc.register(ids[0], ("k",))
+    alloc.free(ids)                           # last owner drops
+    assert alloc.used_blocks == 0
+    assert alloc.evictable_blocks == 1        # the registered one parked
+    assert alloc.free_blocks == 4
+    with pytest.raises(ValueError):
+        alloc.free([ids[0]])                  # freeing a parked block raises
+    alloc.share([ids[0]])                     # ...but a hit resurrects it
+    assert alloc.used_blocks == 1
+
+
+def test_prefix_index_match_and_partial_tail():
+    """Chain matching is block-granular and the partial-tail match finds the
+    longest common prefix of the first divergent block (never covering the
+    whole prompt — >= 1 token is always left to prefill)."""
+    idx = PrefixIndex(block_size=4)
+    alloc = BlockAllocator(8, block_size=4)
+    blocks = alloc.alloc(3)
+    hist = np.arange(12)                      # three full blocks
+    assert idx.insert(hist, blocks, alloc) == 3
+    # same head, diverging inside block 2 -> 2 full + partial R=2
+    probe = np.concatenate([np.arange(10), [99, 98]])
+    full, tail = idx.match(probe)
+    assert full == blocks[:2]
+    assert tail == (blocks[2], 2)
+    # identical prompt: the last block may NOT cover the final token
+    full, tail = idx.match(hist)
+    assert full == blocks[:2]
+    assert tail == (blocks[2], 3)
+    # cold prompt: nothing
+    assert idx.match(np.arange(100, 112)) == ([], None)
 
 
 # ------------------------------------------------------------ decode parity
@@ -103,9 +208,22 @@ def _reqs(vocab, n, plen, max_new, seed=5):
             for i in range(n)]
 
 
+def _pump(sched, queue, max_steps=300):
+    """Drive one arm scheduler to empty: join + chunk prefill + scan."""
+    done = []
+    steps = 0
+    while queue or sched.has_work():
+        sched.try_join(queue, 0.0)
+        done.extend(sched.prefill_step(0.0))
+        done.extend(sched.dispatch(0.0))
+        steps += 1
+        assert steps < max_steps, "scheduler made no progress"
+    return done
+
+
 def test_paged_matches_dense_decode(tiny_cfg, tiny_mesh):
-    """The paged scan path produces the same greedy tokens as the legacy
-    dense-cache gang path (equal-length prompts, both arms)."""
+    """The paged chunked-prefill + scan path produces the same greedy tokens
+    as the legacy dense-cache gang path (equal-length prompts, both arms)."""
     for arm in (LAYER, SEMANTIC):
         outs = {}
         for mode in ("paged", "legacy"):
@@ -141,11 +259,7 @@ def test_in_flight_join_parity(tiny_cfg, tiny_mesh):
                                   block_size=4, scan_tokens=4)
         q = [(2.0, 0, 0.0, req(0, prompt_a, 6))]
         heapq.heapify(q)
-        sched.try_join(q, 0.0)
-        done = []
-        while sched.has_work():
-            done.extend(sched.dispatch(0.0))
-        return done[0].out
+        return _pump(sched, q)[0].out
 
     def run_joined():
         sched = PagedArmScheduler(model, params, n_lanes=4, cache_len=16,
@@ -153,16 +267,240 @@ def test_in_flight_join_parity(tiny_cfg, tiny_mesh):
         q = [(2.0, 0, 0.0, req(1, prompt_b, 12))]
         heapq.heapify(q)
         sched.try_join(q, 0.0)
+        sched.prefill_step(0.0)
         sched.dispatch(0.0)                   # B is mid-flight...
         heapq.heappush(q, (2.0, 1, 0.0, req(0, prompt_a, 6)))
         sched.try_join(q, 0.0)                # ...when A joins
         assert sched.n_active == 2            # the join really was in-flight
-        done = []
-        while sched.has_work():
-            done.extend(sched.dispatch(0.0))
+        done = _pump(sched, q)
         return next(l.out for l in done if l.req.rid == 0)
 
     assert run_solo() == run_joined()
+
+
+def test_prefix_hit_chunked_tail_parity(tiny_cfg, tiny_mesh):
+    """A request whose prompt head sits in the prefix cache (full-block hits
+    + one copy-on-write partial block) decodes the identical tokens to the
+    same request served cold — on both arms."""
+    from repro.dist import api as A
+
+    rng = np.random.default_rng(13)
+    head = rng.integers(0, tiny_cfg.vocab_size, 10).astype(np.int32)
+    donor = np.concatenate([head, rng.integers(0, tiny_cfg.vocab_size, 2)
+                            .astype(np.int32)])
+    probe = np.concatenate([head, rng.integers(0, tiny_cfg.vocab_size, 3)
+                            .astype(np.int32)])
+    req = lambda rid, toks, m: Request(rid=rid, app_id=0, tokens=toks,
+                                       sla_s=4.0, max_new=m, arrival_s=0.0)
+    for mode in ("pipeline", "semantic"):
+        runner = A.build_runner(tiny_cfg, mode, tiny_mesh)
+        params = runner.init(jax.random.PRNGKey(2))
+        make = lambda: PagedArmScheduler(
+            runner.model, params, n_lanes=4, cache_len=32, block_size=4,
+            scan_tokens=4, prefill_chunk=4)
+
+        cold = make()
+        q = [(4.0, 0, 0.0, req(0, probe, 6))]
+        heapq.heapify(q)
+        want = _pump(cold, q)[0].out
+
+        warm = make()
+        q = [(4.0, 0, 0.0, req(1, donor, 4))]
+        heapq.heapify(q)
+        _pump(warm, q)                        # donor populates the cache
+        q = [(4.0, 1, 0.0, req(0, probe, 6))]
+        heapq.heapify(q)
+        got = _pump(warm, q)[0].out
+        st = warm.stats()
+        assert st["prefix_hit_tokens"] >= 8   # two full head blocks shared
+        assert st["cow_copies"] >= 1          # block 2 diverges mid-block
+        assert got == want, f"{mode}: warm {got} != cold {want}"
+        assert st["used_blocks"] == 0
+
+
+def test_chunked_prefill_interleaves_with_decode(tiny_cfg, tiny_mesh):
+    """A long uncached tail commits in fixed-size chunks, and decode scans
+    keep running between chunks — a join wave no longer stalls decode for
+    the whole prompt."""
+    from repro.models.model import build_model
+
+    model = build_model(tiny_cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(3)
+    short = rng.integers(0, tiny_cfg.vocab_size, 3).astype(np.int32)
+    long_p = rng.integers(0, tiny_cfg.vocab_size, 16).astype(np.int32)
+    req = lambda rid, toks, m: Request(rid=rid, app_id=0, tokens=toks,
+                                       sla_s=4.0, max_new=m, arrival_s=0.0)
+    sched = PagedArmScheduler(model, params, n_lanes=4, cache_len=32,
+                              block_size=4, scan_tokens=2, prefill_chunk=4)
+    q = [(4.0, 0, 0.0, req(0, short, 12))]
+    heapq.heapify(q)
+    sched.try_join(q, 0.0)
+    sched.prefill_step(0.0)
+    sched.dispatch(0.0)                       # short request is decoding
+    heapq.heappush(q, (4.0, 1, 0.0, req(1, long_p, 2)))
+    sched.try_join(q, 0.0)                    # long prompt joins
+    decoded_before = sched.decoded_tokens
+    chunks_before = sched.prefill_chunks
+    sched.prefill_step(0.0)                   # chunk 1 of the long tail...
+    sched.dispatch(0.0)                       # ...decode proceeds in between
+    sched.prefill_step(0.0)                   # chunk 2
+    assert sched.prefill_chunks == chunks_before + 2
+    assert sched.decoded_tokens > decoded_before
+    assert sched.prefill_left[[i for i, l in enumerate(sched.lanes)
+                               if l is not None and l.req.rid == 1][0]] > 0
+    done = _pump(sched, q)
+    assert {l.req.rid for l in done} == {0, 1}
+
+
+def test_preempt_resume_parity(tiny_cfg, tiny_mesh):
+    """Pressure spills the latest-deadline lane (blocks freed, tokens kept
+    host-side); its resume re-prefills through the prefix cache and the
+    final token sequence matches the never-preempted run exactly."""
+    from repro.models.model import build_model
+
+    model = build_model(tiny_cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(9)
+    victim_p = rng.integers(0, tiny_cfg.vocab_size, 8).astype(np.int32)
+    urgent_p = rng.integers(0, tiny_cfg.vocab_size, 8).astype(np.int32)
+    req = lambda rid, toks, m, sla: Request(
+        rid=rid, app_id=0, tokens=toks, sla_s=sla, max_new=m, arrival_s=0.0)
+
+    solo = PagedArmScheduler(model, params, n_lanes=2, cache_len=32,
+                             block_size=4, scan_tokens=4, prefill_chunk=8)
+    q = [(9.0, 0, 0.0, req(0, victim_p, 12, 9.0))]
+    heapq.heapify(q)
+    want = _pump(solo, q)[0].out
+
+    # pool of 6 allocatable blocks: the victim's 5 + urgent's 3 can't coexist
+    sched = PagedArmScheduler(model, params, n_lanes=2, cache_len=32,
+                              block_size=4, scan_tokens=4, prefill_chunk=8,
+                              num_blocks=7)
+    q = [(9.0, 0, 0.0, req(0, victim_p, 12, 9.0))]
+    heapq.heapify(q)
+    sched.try_join(q, 0.0)
+    sched.prefill_step(0.0)
+    sched.dispatch(0.0)                       # victim is mid-decode...
+    heapq.heappush(q, (1.0, 1, 0.0, req(1, urgent_p, 4, 1.0)))
+    done = _pump(sched, q)
+    st = sched.stats()
+    assert st["preemptions"] >= 1
+    assert st["spilled_blocks"] >= 5
+    got = next(l.out for l in done if l.req.rid == 0)
+    assert got == want
+    assert next(l for l in done if l.req.rid == 0).preemptions >= 1
+    # the resume's re-prefill hit its own spilled full blocks
+    assert st["prefix_hit_tokens"] > 0
+    assert st["used_blocks"] == 0
+
+
+def test_watermark_spills_proactively(tiny_cfg, tiny_mesh):
+    """watermark > 0 reserves a headroom fraction: an urgent admission that
+    would eat into it spills a later-deadline lane even though the pool is
+    not yet exhausted."""
+    from repro.models.model import build_model
+
+    model = build_model(tiny_cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(4)
+    mk = lambda rid, m, sla: Request(
+        rid=rid, app_id=0,
+        tokens=rng.integers(0, tiny_cfg.vocab_size, 8).astype(np.int32),
+        sla_s=sla, max_new=m, arrival_s=0.0)
+    # pool of 12: the loose lane takes 5; urgent needs 5 more — that FITS
+    # (7 free), but leaves 2 < watermark reserve 0.5 * 12 = 6 -> spill
+    sched = PagedArmScheduler(model, params, n_lanes=4, cache_len=32,
+                              block_size=4, scan_tokens=2, prefill_chunk=8,
+                              num_blocks=13, watermark=0.5,
+                              prefix_sharing=False)
+    q = [(9.0, 0, 0.0, mk(0, 12, 9.0))]
+    heapq.heapify(q)
+    sched.try_join(q, 0.0)
+    sched.prefill_step(0.0)
+    sched.dispatch(0.0)
+    assert sched.alloc.can_alloc(5)           # pool NOT exhausted...
+    heapq.heappush(q, (1.0, 1, 0.0, mk(1, 12, 1.0)))
+    done = _pump(sched, q)
+    assert sched.preemptions >= 1             # ...yet the watermark spilled
+    assert {l.req.rid for l in done} == {0, 1}
+    assert all(len(l.out) == 12 for l in done)
+
+
+def test_validate_raise_mid_wave_flushes_pending_cow(tiny_cfg, tiny_mesh):
+    """An invalid request popped after a COW admission in the same wave must
+    not leave the admitted lane with an unresolved copy (or a leaked pinned
+    source ref): the pending COW flushes before the error propagates."""
+    from repro.models.model import build_model
+
+    model = build_model(tiny_cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(13)
+    head = rng.integers(0, tiny_cfg.vocab_size, 10).astype(np.int32)
+    donor = np.concatenate([head, rng.integers(0, tiny_cfg.vocab_size, 2)
+                            .astype(np.int32)])
+    probe = np.concatenate([head, rng.integers(0, tiny_cfg.vocab_size, 3)
+                            .astype(np.int32)])
+    req = lambda rid, toks, m: Request(rid=rid, app_id=0, tokens=toks,
+                                       sla_s=4.0, max_new=m, arrival_s=0.0)
+    make = lambda: PagedArmScheduler(model, params, n_lanes=4, cache_len=32,
+                                     block_size=4, scan_tokens=4,
+                                     prefill_chunk=4)
+    cold = make()
+    q = [(4.0, 0, 0.0, req(0, probe, 6))]
+    heapq.heapify(q)
+    want = _pump(cold, q)[0].out
+
+    sched = make()
+    q = [(4.0, 0, 0.0, req(1, donor, 4))]
+    heapq.heapify(q)
+    _pump(sched, q)                           # cache populated
+    oversized = req(2, rng.integers(0, tiny_cfg.vocab_size, 30)
+                    .astype(np.int32), 8)     # > per-lane capacity
+    q = [(4.0, 0, 0.0, req(0, probe, 6)), (5.0, 1, 0.0, oversized)]
+    heapq.heapify(q)
+    with pytest.raises(ValueError, match="paged capacity"):
+        sched.try_join(q, 0.0)
+    assert sched.cow_copies == 1              # the pending copy DID run
+    got = _pump(sched, q)
+    assert next(l.out for l in got if l.req.rid == 0) == want
+    assert sched.alloc.used_blocks == 0       # no leaked pinned source ref
+
+
+def test_pressure_never_rejects(tiny_cfg, tiny_mesh):
+    """A block pool sized to force pressure serves EVERY request: admission
+    spills and resumes instead of hard-rejecting, all outputs arrive with
+    full budgets, and the extra latency is reported via the preemption
+    counters."""
+    backend = JaxBackend(tiny_cfg, tiny_mesh, cache_len=32, max_batch=4,
+                         block_size=4, scan_tokens=4, num_blocks=13,
+                         prefill_chunk=8)
+    eng = PlacementEngine(FixedPolicy(LAYER, placement=None), backend)
+    rng = np.random.default_rng(11)
+    mk = lambda rid, sla, m: Request(
+        rid=rid, app_id=0,
+        tokens=rng.integers(0, tiny_cfg.vocab_size, 8).astype(np.int32),
+        sla_s=sla, max_new=m)
+    # two lax lanes fill the 12-block pool (5 blocks each)...
+    reqs = [mk(0, 50.0, 12), mk(1, 60.0, 12)]
+    eng.submit(reqs)
+    eng.step()                                # seated and mid-decode
+    # ...then urgent arrivals that cannot fit without spilling them
+    reqs += [mk(2, 0.5, 12), mk(3, 0.6, 12)]
+    eng.submit(reqs[2:])
+    eng.drain()
+    m = eng.summary()
+    assert m["completed"] == 4                # nobody was rejected
+    assert m["preemptions"] >= 1              # and it really was pressured
+    assert m["spilled_blocks"] > 0
+    assert m["used_blocks"] == 0
+    # the spilled lanes' resumes re-prefill through the prefix cache, so
+    # hits must be visible at the engine level too
+    assert m["prefix_hit_rate"] > 0
+    for r in reqs:
+        assert r.output.shape == (12,)
+    assert eng.stats.preemptions == m["preemptions"]   # EngineStats mirror
+    assert eng.stats.spilled_blocks == m["spilled_blocks"]
 
 
 def test_scan_dispatch_budget(tiny_cfg, tiny_mesh):
@@ -177,14 +515,15 @@ def test_scan_dispatch_budget(tiny_cfg, tiny_mesh):
     assert m["decoded_tokens"] == 3 * 16      # max_new-1 decode tokens each
     # <= 1 dispatch per 8 decode tokens per lane-group: 16 tokens -> 2 scans
     assert m["decode_dispatches"] <= -(-16 // 8)
-    assert m["prefill_calls"] == 1            # one join wave
+    assert m["prefill_calls"] == 1            # one wave, one chunk
     for r in reqs:
         assert r.output.shape == (17,)
 
 
 def test_retire_frees_blocks_and_occupancy_reported(tiny_cfg, tiny_mesh):
-    """Finished sequences release their blocks immediately and occupancy /
-    pool accounting flows through extra_metrics."""
+    """Finished sequences release their blocks immediately (full ones into
+    the evictable prefix cache) and occupancy / pool accounting flows
+    through extra_metrics."""
     backend = JaxBackend(tiny_cfg, tiny_mesh, cache_len=16, max_batch=2,
                          block_size=4, scan_tokens=4)
     eng = PlacementEngine(FixedPolicy(LAYER, placement=None), backend)
@@ -193,12 +532,17 @@ def test_retire_frees_blocks_and_occupancy_reported(tiny_cfg, tiny_mesh):
     eng.drain()
     m = eng.summary()
     assert m["completed"] == 5
-    assert m["used_blocks"] == 0              # all blocks returned
+    assert m["used_blocks"] == 0              # all references dropped
+    assert m["evictable_blocks"] > 0          # retired prefixes stay cached
     assert 0 < m["batch_occupancy"] <= 1
     assert m["compile_decode_misses"] >= 1
     # steady scan length is reused, not recompiled per dispatch
     assert m["compile_decode_hits"] >= 1
-    assert m["join_waves"] == m["prefill_calls"]
+    assert m["compile_prefill_misses"] >= 1
+    assert m["prefill_calls"] == m["prefill_chunks"]
+    # every prompt is distinct here, so nothing can hit the prefix cache —
+    # the registered blocks just sit evictable (asserted above)
+    assert m["prefix_hit_rate"] == 0.0
 
 
 def test_legacy_bucket_churn_reported(tiny_cfg, tiny_mesh):
