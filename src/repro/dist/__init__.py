@@ -10,8 +10,10 @@ those decisions into executables over a jax device mesh:
   train/serve step factories consumed by ``launch/`` and ``serving/``.
 - :mod:`repro.dist.sharding` — PartitionSpec recipes over the
   ``repro.models`` param / cache / batch pytrees.
-- :mod:`repro.dist.pipeline` — GPipe-style microbatched execution for the
-  layer-split mode (loss is invariant to the microbatch count).
+- :mod:`repro.dist.pipeline` — microbatched execution for the layer-split
+  mode (loss is invariant to the microbatch count and schedule): the GSPMD
+  stage-sharded scan plus the explicit stage-graph runtime (shard_map +
+  ppermute gpipe/1f1b schedules, and the expert-parallel all-to-all path).
 """
 from repro.dist.api import (  # noqa: F401
     batch_specs,

@@ -59,6 +59,12 @@ class BaseRunner:
     def loss(self, params, batch, *, remat: bool = False):
         return self.model.loss_chunked(params, batch, remat=remat)
 
+    def value_and_grad(self, params, batch, *, remat: bool = False):
+        """(loss, grads) — overridden by runners whose substrate computes
+        gradients manually (the explicit pipeline schedules)."""
+        return jax.value_and_grad(
+            lambda p: self.loss(p, batch, remat=remat))(params)
+
     # -------------------------------------------------------------- serving
     def prefill_step(self, params, batch):
         """Full-prompt forward; returns [B, S, vocab] logits."""
@@ -130,28 +136,132 @@ class SemanticRunner(BaseRunner):
 
 
 class PipelineRunner(BaseRunner):
-    """LAYER split: stage-sharded superblock stack + microbatched loss."""
+    """LAYER split: the superblock stack partitioned into pipeline stages
+    over the mesh 'model' axis, executed under one of three schedules:
+
+    - ``"gspmd"`` (default, the historical path): stage-sharded stack +
+      microbatched outer scan; GSPMD places the stage communication.
+    - ``"gpipe"`` / ``"1f1b"``: the explicit stage-graph runtime
+      (repro.dist.pipeline) — each 'model' slice owns its superblock span as
+      real local params inside ``shard_map`` and activations/cotangents move
+      with explicit ``lax.ppermute``; ``"1f1b"`` interleaves
+      one-forward-one-backward to cut peak in-flight activations to O(S)
+      and shrink the bubble vs gpipe's fill–drain.
+
+    With ``expert_parallel`` on an explicit schedule, the 'model' axis
+    carries *experts* instead of stages (the two uses are exclusive) and the
+    MoE all-to-all path (``models.moe._moe_apply_ep``) runs end-to-end;
+    under ``"gspmd"`` expert parallelism stays layout-level.
+
+    Serving (`init_cache`/`serve_step`/`prefill_*`) always uses the GSPMD
+    stage-sharded layout — the explicit schedules are a training substrate.
+    """
 
     mode = "pipeline"
     _cache_model_leading = True
 
     def __init__(self, cfg: ArchConfig, mesh, *,
                  n_microbatches: Optional[int] = None,
-                 expert_parallel: bool = False, **kw):
+                 expert_parallel: bool = False,
+                 schedule: str = "gspmd",
+                 memory_budget: Optional[int] = None, **kw):
+        if schedule not in PL.SCHEDULES:
+            raise ValueError(
+                f"unknown schedule {schedule!r}; expected one of "
+                f"{PL.SCHEDULES}")
         super().__init__(cfg, mesh, **kw)
         self.n_microbatches = n_microbatches
         self.expert_parallel = expert_parallel
+        self.schedule = schedule
+        #: gpipe only — cap on saved in-flight microbatches; K < M splits the
+        #: flush into fill-drain rounds (equal-memory comparisons vs 1f1b).
+        self.memory_budget = memory_budget
         self.n_stages = dict(mesh.shape).get("model", 1)
+        self._ep_model = None
+        if self._use_ep_substrate():
+            n_model = self.n_stages
+            if cfg.moe.n_experts % max(n_model, 1):
+                raise ValueError(
+                    f"{cfg.name}: expert parallelism needs n_experts="
+                    f"{cfg.moe.n_experts} divisible by the mesh 'model' "
+                    f"size {n_model}")
+            self._ep_model = build_model(
+                cfg.replace(expert_parallel_axis="model"))
 
+    # ---------------------------------------------------------- path routing
+    def _use_ep_substrate(self) -> bool:
+        return (self.expert_parallel and self.schedule != "gspmd"
+                and self.cfg.moe is not None)
+
+    def _use_stage_graph(self) -> bool:
+        return self.schedule != "gspmd" and not self._use_ep_substrate()
+
+    def _resolve(self, batch) -> int:
+        return PL.resolve_microbatches(batch["tokens"].shape[0],
+                                       self.n_microbatches, self.n_stages)
+
+    # ------------------------------------------------------------------ loss
     def loss(self, params, batch, *, remat: bool = False):
-        b = batch["tokens"].shape[0]
-        m = PL.resolve_microbatches(b, self.n_microbatches, self.n_stages)
+        m = self._resolve(batch)
+        if self._use_ep_substrate():
+            return PL.ep_loss(self._ep_model, params, batch, self.mesh,
+                              n_micro=m, remat=remat)
+        if self._use_stage_graph():
+            return PL.stage_graph_loss(self.model, params, batch, self.mesh,
+                                       schedule=self.schedule, n_micro=m,
+                                       remat=remat)
         return PL.microbatch_loss(self.model, params, batch, m, remat=remat)
 
+    def value_and_grad(self, params, batch, *, remat: bool = False):
+        m = self._resolve(batch)
+        if self._use_ep_substrate():
+            return PL.ep_value_and_grad(self._ep_model, params, batch,
+                                        self.mesh, n_micro=m, remat=remat)
+        if self._use_stage_graph():
+            return PL.stage_graph_value_and_grad(
+                self.model, params, batch, self.mesh,
+                schedule=self.schedule, n_micro=m, remat=remat,
+                memory_budget=self.memory_budget)
+        return super().value_and_grad(params, batch, remat=remat)
+
+    # -------------------------------------------------------------- layouts
     def param_specs(self, params):
+        if self.schedule != "gspmd":
+            return SH.stage_param_specs(
+                params, self.mesh, expert_parallel=self._use_ep_substrate())
         return SH.pipeline_param_specs(params, self.mesh,
                                        zero_data=self.zero_data,
                                        expert_parallel=self.expert_parallel)
+
+    # ----------------------------------------------------------- accounting
+    def schedule_stats(self, batch_size: int, seq_len: int) -> dict:
+        """Bubble-fraction / transfer-bytes accounting for one train step of
+        the configured schedule (analytic, from the static tick table)."""
+        m = PL.resolve_microbatches(batch_size, self.n_microbatches,
+                                    self.n_stages)
+        n_data = dict(self.mesh.shape).get("data", 1)
+        stats = {"mode": self.mode, "schedule": self.schedule,
+                 "n_stages": self.n_stages, "n_microbatches": m,
+                 "memory_budget": self.memory_budget,
+                 "expert_parallel": bool(self._use_ep_substrate())}
+        if self.schedule == "gspmd" or self._use_ep_substrate():
+            # communication is a compiler side effect (gspmd) / all-to-alls
+            # sized by the MoE dispatch (ep) — no tick table to report.
+            return stats
+        sched = PL.build_schedule(self.schedule, self.n_stages, m,
+                                  memory_budget=self.memory_budget)
+        pb = PL.payload_bytes(self.cfg, batch_size // m // n_data, seq_len)
+        stats.update({
+            "ticks": sched.ticks,
+            "bubble_fraction": round(sched.bubble_fraction, 4),
+            "peak_saved_microbatches": sched.peak_saved_microbatches,
+            "n_transfers": sched.n_transfers,
+            "payload_bytes": pb,
+            "transfer_bytes_per_step": sched.n_transfers * pb,
+            # SPMD wire traffic incl. masked sends (2 ppermutes/tick/stage)
+            "wire_bytes_per_step": 2 * sched.ticks * self.n_stages * pb,
+        })
+        return stats
 
 
 def build_runner(cfg: ArchConfig, mode: str, mesh, *,
@@ -159,15 +269,24 @@ def build_runner(cfg: ArchConfig, mode: str, mesh, *,
                  shard_cache_len: bool = False,
                  expert_parallel: bool = False,
                  zero_data: bool = True,
-                 n_branches: Optional[int] = None):
+                 n_branches: Optional[int] = None,
+                 schedule: str = "gspmd",
+                 memory_budget: Optional[int] = None):
     """Construct the runner for one split mode.
 
     ``n_microbatches``    pipeline only; default = mesh 'model' size.
     ``shard_cache_len``   flash-decoding layout: KV cache length on 'data'.
-    ``expert_parallel``   pipeline MoE: expert dim on 'model' (layout-level
-                          EP; the shard_map all-to-all path is a ROADMAP item).
+    ``expert_parallel``   pipeline MoE: expert dim on 'model'.  Layout-level
+                          under ``schedule="gspmd"``; with an explicit
+                          schedule the shard_map all-to-all path runs
+                          end-to-end.
     ``zero_data``         ZeRO-style param sharding over 'data' (on by default).
     ``n_branches``        semantic only; default = max(2, mesh 'model' size).
+    ``schedule``          pipeline only: "gspmd" (stage-sharded scan, GSPMD
+                          places the communication) | "gpipe" | "1f1b"
+                          (explicit shard_map + ppermute stage graph).
+    ``memory_budget``     pipeline gpipe only: cap on saved in-flight
+                          microbatches (K < M -> fill-drain rounds).
     """
     common = dict(shard_cache_len=shard_cache_len, zero_data=zero_data)
     if mode == "fsdp":
@@ -176,18 +295,22 @@ def build_runner(cfg: ArchConfig, mode: str, mesh, *,
         return SemanticRunner(cfg, mesh, n_branches=n_branches, **common)
     if mode == "pipeline":
         return PipelineRunner(cfg, mesh, n_microbatches=n_microbatches,
-                              expert_parallel=expert_parallel, **common)
+                              expert_parallel=expert_parallel,
+                              schedule=schedule, memory_budget=memory_budget,
+                              **common)
     raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
 
 
 # ------------------------------------------------------------ step factories
 def make_train_step(runner, *, lr: float = 3e-4, remat: bool = False,
                     weight_decay: float = 0.1, clip_norm: float = 1.0):
-    """(params, opt, batch) -> (params, opt, loss) — grad + AdamW update."""
+    """(params, opt, batch) -> (params, opt, loss) — grad + AdamW update.
+    Gradients come from ``runner.value_and_grad`` so schedule-substrate
+    runners (explicit pipeline / expert parallelism) plug in their manual
+    backward without changing the step surface."""
 
     def step(params, opt, batch):
-        loss, grads = jax.value_and_grad(
-            lambda p: runner.loss(p, batch, remat=remat))(params)
+        loss, grads = runner.value_and_grad(params, batch, remat=remat)
         params, opt = adamw_update(grads, opt, params, lr=lr,
                                    weight_decay=weight_decay,
                                    clip_norm=clip_norm)

@@ -127,6 +127,44 @@ def pipeline_param_specs(params, mesh, *, zero_data: bool = True,
     return jax.tree_util.tree_map_with_path(spec, params)
 
 
+def stage_param_specs(params, mesh, *, expert_parallel: bool = False):
+    """Stage-local layout for the explicit stage-graph pipeline
+    (``repro.dist.pipeline`` schedules ``gpipe``/``1f1b``).
+
+    Inside ``shard_map`` each mesh 'model' slice must own its contiguous
+    superblock span as *real local params* (a [n_sb/S, ...] leaf it scans
+    over), so block leaves put the stacked-superblock dim on 'model' and
+    everything else — embed, final norm — is replicated: stage 0 consumes the
+    embedding, the last stage the head, and grads are psum'd over 'model' by
+    the schedule.  Nothing is sharded over 'data' (batch parallelism is
+    explicit: microbatches are split over 'data' and grads pmean'd).
+
+    With ``expert_parallel`` the mesh 'model' axis carries *experts* instead
+    of stages (the two uses of the axis are exclusive): MoE expert leaves
+    [n_sb, E, ...] shard dim 1, every other leaf is replicated, and
+    ``models.moe._moe_apply_ep`` exchanges tokens with all-to-alls.
+    """
+    sizes = _axis_sizes(mesh)
+    n_model = sizes.get("model", 1)
+
+    def spec(path, leaf):
+        shape = tuple(leaf.shape)
+        if not _path_has(path, "blocks", "enc_blocks") or n_model <= 1:
+            return P(*([None] * len(shape)))
+        if expert_parallel:
+            if _path_has(path, "experts") and len(shape) >= 3 \
+                    and shape[1] % n_model == 0:
+                return P(*([None, "model"] + [None] * (len(shape) - 2)))
+            return P(*([None] * len(shape)))
+        if shape and shape[0] % n_model == 0:
+            return P(*(["model"] + [None] * (len(shape) - 1)))
+        raise ValueError(
+            f"stage split needs n_superblocks divisible by the mesh 'model' "
+            f"size {n_model}; got block leaf shape {shape}")
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
 # ------------------------------------------------------------- cache specs
 def cache_specs(cache, mesh, *, shard_cache_len: bool = False,
                 model_leading: bool = False):

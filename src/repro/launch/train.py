@@ -44,6 +44,18 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--mesh", default="1,1")
+    ap.add_argument("--schedule", default="gspmd",
+                    choices=["gspmd", "gpipe", "1f1b"],
+                    help="pipeline mode: gspmd (compiler-placed stage scan) "
+                         "or the explicit shard_map+ppermute stage graph")
+    ap.add_argument("--n-microbatches", type=int, default=0,
+                    help="pipeline microbatch count (0: mesh 'model' size)")
+    ap.add_argument("--memory-budget", type=int, default=0,
+                    help="gpipe: cap on saved in-flight microbatches "
+                         "(0: unbounded)")
+    ap.add_argument("--expert-parallel", action="store_true",
+                    help="MoE: shard experts over 'model' (with an explicit "
+                         "--schedule the all-to-all path runs end-to-end)")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-scale variant of the arch")
     ap.add_argument("--d-model", type=int, default=0,
@@ -60,8 +72,16 @@ def main(argv=None):
     cfg = cfg.replace(dtype="float32")
 
     mesh = make_mesh(args.mesh)
-    runner = A.build_runner(cfg, args.mode, mesh)
+    runner = A.build_runner(
+        cfg, args.mode, mesh,
+        n_microbatches=args.n_microbatches or None,
+        schedule=args.schedule if args.mode == "pipeline" else "gspmd",
+        memory_budget=args.memory_budget or None,
+        expert_parallel=args.expert_parallel)
     rcfg = runner.cfg
+    if args.mode == "pipeline":
+        print("schedule:", runner.schedule_stats(args.batch, args.seq_len),
+              flush=True)
     key = jax.random.PRNGKey(0)
     params = runner.init(key)
     opt = adamw_init(params)

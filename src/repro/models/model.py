@@ -122,6 +122,33 @@ class Model:
         h, aux = self.hidden(params, batch, remat=remat)
         return _chunked_ce(self, params, h, batch["labels"], chunk) + 0.01 * aux
 
+    # ----------------------------------------------------- per-stage surface
+    # The explicit stage-graph pipeline (repro.dist.pipeline) calls the model
+    # in three pieces inside ``shard_map``: stage 0 embeds, every stage applies
+    # its local slice of the superblock stack, the last stage runs the head.
+    @property
+    def supports_stage_split(self) -> bool:
+        """Plain decoder-only stacks only: enc-dec cross inputs and modality
+        frontends are stage-0 side inputs the stage graph does not route."""
+        return not self.cfg.is_encdec and self.cfg.frontend is None
+
+    def stage_embed(self, params, tokens):
+        """[B, S] tokens -> [B, S, d] stage-0 input activations."""
+        return L.embed_apply(params["embed"], tokens, self.cfg)
+
+    def stage_apply(self, blocks_span, x, *, positions, remat: bool = False):
+        """Apply a contiguous span of the superblock stack (leaves carry a
+        leading [n_local] dim).  Returns (x, aux)."""
+        return T.stack_apply_span(blocks_span, x, self.cfg,
+                                  positions=positions, remat=remat)
+
+    def stage_head_loss(self, params, h, labels):
+        """Final norm + unembed + mean CE over one microbatch's hidden states
+        (the last pipeline stage's op; aux is routed by the schedule)."""
+        h = L.norm_apply(params["final_norm"], h, self.cfg)
+        logits = L.unembed_apply(params["embed"], h, self.cfg)
+        return cross_entropy(logits, labels)
+
     # ---------------------------------------------------------------- decode
     @property
     def supports_single_step_prefill(self) -> bool:
@@ -286,6 +313,10 @@ class SemanticModel:
                      remat: bool = False):
         h, aux = self.hidden(params, batch, remat=remat)
         return _chunked_ce(self, params, h, batch["labels"], chunk) + 0.01 * aux
+
+    @property
+    def supports_stage_split(self) -> bool:
+        return False  # branches already own the 'model' axis
 
     @property
     def supports_single_step_prefill(self) -> bool:

@@ -140,6 +140,25 @@ def superblock_apply(params, x, cfg: ArchConfig, *, positions, cache=None,
     return x, new_cache, aux
 
 
+def stack_apply_span(params_span, x, cfg: ArchConfig, *, positions,
+                     remat: bool = False):
+    """lax.scan over a *local span* of stacked superblocks (no decode cache,
+    no enc-dec cross inputs) — the per-stage apply of the explicit stage-graph
+    pipeline (repro.dist.pipeline).  ``params_span`` leaves carry a leading
+    [n_local] dim (the contiguous slice of the superblock stack owned by one
+    mesh 'model' slice inside ``shard_map``).  Returns (x, aux)."""
+    def body(carry, sb_params):
+        h, aux = carry
+        h, _, a = superblock_apply(sb_params, h, cfg, positions=positions)
+        return (h, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params_span)
+    return x, aux
+
+
 def stack_init(key, cfg: ArchConfig, cross: bool = False):
     """Init n_superblocks stacked superblocks: every leaf gets leading dim N."""
     keys = jax.random.split(key, cfg.n_superblocks)

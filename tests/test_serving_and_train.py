@@ -1,39 +1,58 @@
-"""End-to-end: training driver descends; SplitPlace server routes + learns."""
+"""End-to-end: training driver descends; the placement engine (the former
+``SplitPlaceServer`` surface, now ``repro.engine`` directly) routes requests
+through the MAB and learns."""
 import jax
 import numpy as np
 import pytest
 
 from repro.configs.base import get_config
 from repro.core import mab
-from repro.serving.server import Request, SplitPlaceServer
+from repro.engine import MABPolicy, PlacementEngine, Request
+from repro.engine.jax_backend import JaxBackend
 
 
-def test_server_layer_and_semantic_roundtrip(tiny_cfg, tiny_mesh):
+def make_engine(cfg, mesh, *, cache_len, seed=0):
+    """Historical server semantics: n_ctx=8, no E_a warm start."""
+    policy = MABPolicy(3, bandit="ucb", seed=seed, n_ctx=8,
+                       ema_init_values=None, placement=None)
+    backend = JaxBackend(cfg, mesh, cache_len=cache_len, max_batch=32,
+                        seed=seed)
+    return PlacementEngine(policy, backend), policy
+
+
+def test_engine_layer_and_semantic_roundtrip(tiny_cfg, tiny_mesh):
     """Both split arms serve requests: decisions happen before observations,
     so an untried context gives every request of the first batch LAYER (UCB
     scores untried arms inf, argmax breaks ties low); the next batch in the
     same context bucket gets SEMANTIC, and each observation updates the
     reward state."""
-    server = SplitPlaceServer(tiny_cfg, tiny_mesh, cache_len=16, seed=0)
+    eng, policy = make_engine(tiny_cfg, tiny_mesh, cache_len=16)
     # sla >> any exec time keeps the SLA/E_a context in the top bucket, so
     # every batch hits the same bandit cell deterministically
     make_req = lambda rid: Request(
         rid=rid, app_id=0, tokens=np.array([1, 2, 3], np.int32),
         sla_s=1000.0, max_new=2)
-    r0, r1 = server.serve_batch([make_req(0), make_req(1)])
-    (r2,) = server.serve_batch([make_req(2)])
+    reqs = [make_req(0), make_req(1)]
+    eng.submit(reqs)
+    outcomes = list(eng.drain())
+    (r3,) = ([make_req(2)])
+    eng.submit([r3])
+    outcomes += list(eng.drain())
+    r0, r1 = reqs
     assert r0.decision == r1.decision == mab.LAYER
-    assert r2.decision == mab.SEMANTIC
-    for r in (r0, r1, r2):
+    assert r3.decision == mab.SEMANTIC
+    for r in (r0, r1, r3):
         assert r.output is not None and np.isfinite(r.output).all()
         assert r.output.shape == (2,)         # each request gets its own row
         assert r.latency_s > 0
-    s = server.summary()
-    assert s["served"] == 3
-    assert set(s["per_mode"]) == {"pipeline", "semantic"}
-    assert 0 <= s["mean_reward"] <= 1
+    assert len(outcomes) == 3
+    per_mode = {}
+    for o in outcomes:
+        per_mode[o.decision] = per_mode.get(o.decision, 0) + 1
+        assert 0 <= o.reward <= 1
+    assert per_mode == {mab.LAYER: 2, mab.SEMANTIC: 1}
     # reward state updated: every observation landed in the bandit
-    counts = np.asarray(server.state.bandit.counts)  # [n_apps, n_ctx, 2]
+    counts = np.asarray(policy.state.bandit.counts)  # [n_apps, n_ctx, 2]
     assert counts.sum() == 3
     assert counts[0].sum(axis=0).tolist() == [2.0, 1.0]
 
@@ -48,18 +67,32 @@ def test_train_driver_descends():
 
 
 @pytest.mark.slow
-def test_splitplace_server_routes():
+def test_train_driver_descends_1f1b():
+    """The explicit stage-graph substrate trains end-to-end through the
+    driver (1x1 mesh degenerates to S=1 but exercises the full executor)."""
+    from repro.launch.train import main
+    losses = main(["--arch", "stablelm-1.6b", "--reduced", "--steps", "30",
+                   "--seq-len", "64", "--batch", "4", "--mesh", "1,1",
+                   "--mode", "pipeline", "--schedule", "1f1b",
+                   "--n-microbatches", "2",
+                   "--lr", "3e-3", "--log-every", "29"])
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+@pytest.mark.slow
+def test_engine_routes_mixed_apps():
     cfg = get_config("stablelm-1.6b").reduced()
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    server = SplitPlaceServer(cfg, mesh, cache_len=32, seed=0)
+    eng, _ = make_engine(cfg, mesh, cache_len=32)
     rng = np.random.default_rng(0)
+    outcomes = []
     for b in range(6):
         reqs = [Request(rid=b * 4 + i, app_id=int(rng.integers(3)),
                         tokens=rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
                         sla_s=float(rng.uniform(0.05, 5.0)), max_new=2)
                 for i in range(4)]
-        server.serve_batch(reqs)
-    s = server.summary()
-    assert s["served"] == 24
-    assert set(s["per_mode"]) <= {"pipeline", "semantic"}
-    assert 0 <= s["mean_reward"] <= 1
+        eng.submit(reqs)
+        outcomes += list(eng.drain())
+    assert len(outcomes) == 24
+    assert {o.decision for o in outcomes} <= {mab.LAYER, mab.SEMANTIC}
+    assert all(0 <= o.reward <= 1 for o in outcomes)
