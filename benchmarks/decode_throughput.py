@@ -15,7 +15,10 @@ and a second, *shared-prefix* Poisson trace (requests drawn from a few
 prompt-head families — the common-prompt regime of multi-tenant edge
 serving) through the paged path with prefix sharing OFF vs ON, plus a
 pressure run against a deliberately undersized block pool (preemption
-spill/resume instead of admission rejection).
+spill/resume instead of admission rejection).  The pressure run repeats
+with the int8 KV-block layout at the SAME byte budget
+(``kv_dtype="int8"`` — ~3.6x the blocks at hd=32), reporting
+``kv_capacity_x`` and the preemption-count drop.
 
 Emits ``BENCH_decode.json`` with, per mode: tokens/s, jitted dispatches per
 generated token, steady-state batch occupancy, mean response, and for the
@@ -109,14 +112,15 @@ def _waves(n_reqs, rng, base: int = 2, lam: int = 4):
 def run_mode(mode: str, trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
              scan_tokens: int, cache_len: int = 32, block_size: int = 8,
              prefix_sharing: bool = False, num_blocks=None,
-             reps: int = 3) -> dict:
+             kv_dtype: str = "f32", reps: int = 3) -> dict:
     from repro.engine import FixedPolicy, LAYER, PlacementEngine
     from repro.engine.jax_backend import JaxBackend
 
     backend = JaxBackend(cfg, mesh, cache_len=cache_len, max_batch=max_batch,
                          decode="legacy" if mode == "gang" else "paged",
                          block_size=block_size, scan_tokens=scan_tokens,
-                         prefix_sharing=prefix_sharing, num_blocks=num_blocks)
+                         prefix_sharing=prefix_sharing, num_blocks=num_blocks,
+                         kv_dtype=kv_dtype)
     eng = PlacementEngine(FixedPolicy(LAYER, placement=None), backend)
     # warmup: identical-profile passes (same seed -> same wave/prompt/scan
     # buckets) so the timed region measures steady-state serving, not
@@ -189,6 +193,8 @@ def run_mode(mode: str, trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
             (m["preemptions"] - warm["preemptions"]) / reps, 1)
         out["spilled_blocks"] = round(
             (m["spilled_blocks"] - warm["spilled_blocks"]) / reps, 1)
+        out["kv_capacity_x"] = m["kv_capacity_x"]
+        out["kv_block_bytes"] = m["kv_block_bytes"]
     return out
 
 
@@ -282,6 +288,35 @@ def main(argv=None):
     print("paged_pressure:", json.dumps(pr))
     if pr["completed"] != n_shared:
         print("WARNING: pressure run dropped requests")
+
+    # ---- quantized pressure run: int8 KV at the SAME byte budget ----------
+    # the f32 pressure pool holds 24 blocks; int8 codes + per-slot f32
+    # scales shrink a block by int8_kv_capacity_ratio(hd), so the same bytes
+    # buy ~ratio x as many blocks — preemption pressure should drop at equal
+    # memory, with zero rejections either way
+    from repro.decode import int8_kv_capacity_ratio
+    ratio = int8_kv_capacity_ratio(cfg.head_dim)
+    results["paged_pressure_int8"] = run_mode(
+        "paged", pressure_trace, n_shared, cfg, mesh,
+        max_batch=args.max_batch, scan_tokens=2,
+        cache_len=128, prefix_sharing=True,
+        num_blocks=1 + int(24 * ratio), kv_dtype="int8")
+    pi = results["paged_pressure_int8"]
+    results["int8_vs_f32_pressure"] = {
+        "kv_capacity_x": pi["kv_capacity_x"],
+        "blocks_at_equal_bytes": {"f32": 24, "int8": int(24 * ratio)},
+        "preemptions_f32": pr["preemptions"],
+        "preemptions_int8": pi["preemptions"],
+        "completed_f32": pr["completed"],
+        "completed_int8": pi["completed"],
+    }
+    print("paged_pressure_int8:", json.dumps(pi))
+    print("int8_vs_f32_pressure:",
+          json.dumps(results["int8_vs_f32_pressure"]))
+    if pi["completed"] != n_shared:
+        print("WARNING: int8 pressure run dropped requests")
+    if pi["preemptions"] > pr["preemptions"]:
+        print("WARNING: int8 KV did not reduce preemptions at equal bytes")
 
     pathlib.Path(args.out).write_text(json.dumps(results, indent=2))
     print(f"wrote {args.out}")

@@ -19,15 +19,19 @@ behind the unchanged ``ExecutionBackend`` protocol.
 """
 from repro.decode.paged_cache import (NULL_BLOCK, BlockAllocator, PrefixIndex,
                                       chunk_write_slots, copy_blocks,
-                                      write_slots)
+                                      int8_kv_capacity_ratio,
+                                      pool_block_bytes, quantize_kv,
+                                      quantize_pool, write_slots)
 from repro.decode.paged_model import (make_decode_fn, make_prefill_chunk_fn,
                                       paged_decode_logits,
+                                      quantize_attn_params,
                                       supports_paged_decode)
 from repro.decode.scheduler import Lane, PagedArmScheduler
 
 __all__ = [
     "NULL_BLOCK", "BlockAllocator", "Lane", "PagedArmScheduler",
-    "PrefixIndex", "chunk_write_slots", "copy_blocks", "make_decode_fn",
-    "make_prefill_chunk_fn", "paged_decode_logits", "supports_paged_decode",
-    "write_slots",
+    "PrefixIndex", "chunk_write_slots", "copy_blocks",
+    "int8_kv_capacity_ratio", "make_decode_fn", "make_prefill_chunk_fn",
+    "paged_decode_logits", "pool_block_bytes", "quantize_attn_params",
+    "quantize_kv", "quantize_pool", "supports_paged_decode", "write_slots",
 ]

@@ -257,15 +257,86 @@ class PrefixIndex:
                 del self._children[parent]
 
 
+def quantize_kv(x):
+    """Symmetric per-token int8 quantization of K/V vectors [..., hd]:
+    one f32 scale per (token, kv head) — the amax over the head dim — so a
+    single-token decode write never rescales neighbouring slots.  Returns
+    ``(codes int8 [..., hd], scales f32 [...])``; dequant is
+    ``codes * scales[..., None]``."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = amax / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(xf / safe[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_pool(pool):
+    """Convert a freshly initialized f32 paged pool to the int8 layout.
+
+    Every attention pool entry ``{"k", "v"}`` (leaves [..., P, bs, K, hd])
+    becomes ``{"k" int8, "k_scale" f32 [..., P, bs, K], "v", "v_scale"}`` —
+    int8 codes plus one symmetric scale per token slot per kv head.  The
+    allocator / prefix index / block tables never look inside blocks, so
+    they are untouched; ``copy_blocks`` and the write paths key off the
+    ``_scale`` leaves.  Capacity math: a token slot shrinks from ``4*hd``
+    to ``hd + 4`` bytes per kv head (:func:`int8_kv_capacity_ratio`).
+    """
+    def conv(node):
+        if isinstance(node, dict):
+            if set(node) == {"k", "v"}:
+                return {
+                    "k": jnp.zeros(node["k"].shape, jnp.int8),
+                    "k_scale": jnp.zeros(node["k"].shape[:-1], jnp.float32),
+                    "v": jnp.zeros(node["v"].shape, jnp.int8),
+                    "v_scale": jnp.zeros(node["v"].shape[:-1], jnp.float32),
+                }
+            return {k: conv(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(conv(v) for v in node)
+        return node
+
+    return conv(pool)
+
+
+def int8_kv_capacity_ratio(head_dim: int, scale_bytes: int = 4) -> float:
+    """Effective-capacity multiplier of the int8 KV layout over f32: an f32
+    token slot is ``4*hd`` bytes per kv head, an int8 slot ``hd`` code bytes
+    plus one f32 scale — ``4*hd / (hd + 4)`` (3.56x at hd=32, ->4x as hd
+    grows; >= 1.9x for every hd >= 4)."""
+    return (4.0 * head_dim) / (head_dim + scale_bytes)
+
+
+def _is_scale_path(path) -> bool:
+    last = path[-1]
+    name = getattr(last, "key", None)
+    return isinstance(name, str) and name.endswith("_scale")
+
+
+def pool_block_bytes(pool) -> int:
+    """Pool bytes per physical block, summed over every layer/leaf — the
+    denominator of the effective-capacity telemetry.  Scale leaves
+    ([..., P, bs, K]) have their physical axis at -3, KV leaves at -4."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(pool)[0]:
+        p = leaf.shape[-3] if _is_scale_path(path) else leaf.shape[-4]
+        total += (leaf.size // p) * leaf.dtype.itemsize
+    return total
+
+
 def copy_blocks(pool, src: jax.Array, dst: jax.Array):
     """Copy physical blocks ``dst[i] := src[i]`` in every pool leaf — the
     copy-on-write resolve for a partially matched block.  ``src``/``dst``:
-    [n] int32; padded pairs point both ids at the null scratch block."""
-    def leaf(x):
-        # x: [..., P, bs, K, hd] — the physical axis is -4
+    [n] int32; padded pairs point both ids at the null scratch block.
+    Layout-agnostic: int8 code leaves copy bit-exactly and their per-slot
+    scale leaves ([..., P, bs, K], physical axis -3) ride along, so a COW'd
+    quantized block never requantizes."""
+    def leaf(path, x):
+        if _is_scale_path(path):
+            return x.at[..., dst, :, :].set(x[..., src, :, :])
         return x.at[..., dst, :, :, :].set(x[..., src, :, :, :])
 
-    return jax.tree.map(leaf, pool)
+    return jax.tree_util.tree_map_with_path(leaf, pool)
 
 
 def write_slots(lengths: jax.Array, block_tables: jax.Array,

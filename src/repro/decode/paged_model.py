@@ -22,14 +22,20 @@ Three jit-friendly builders over a ``repro.models`` model (single-branch
 ``paged_decode_logits``  a single paged decode step (used by the scan body
                     and directly by parity tests).
 
-The paged decode attention dispatches to the Pallas
-``paged_decode_attention`` kernel on TPU backends and to the dense-gather
-XLA reference elsewhere — the same dispatch convention as
-``repro.models.attention``.  Block tables may alias physical blocks across
-lanes (prefix sharing); both attention paths only ever gather through the
-table, so aliasing is read-only.  Chunked prefill uses the XLA gather
-reference everywhere (a Pallas chunk kernel is future work — chunks are
-short and amortized across the wave).
+Both paged attention paths dispatch to their Pallas kernels
+(``paged_decode_attention``, ``paged_prefill_attention``) on TPU backends
+and to the dense-gather XLA references elsewhere — the same dispatch
+convention as ``repro.models.attention``.  Block tables may alias physical
+blocks across lanes (prefix sharing); the attention paths only ever gather
+through the table, so aliasing is read-only.
+
+Quantized serving rides the same forwards: an int8 pool (``"k_scale"`` /
+``"v_scale"`` leaves — see ``paged_cache.quantize_pool``) makes every
+scatter quantize-on-write (per-token symmetric scales, so block content is
+a pure function of the token's K/V and prefix hits replay bit-exactly) and
+every attend dequantize-in-register; dict-valued projection weights
+(``{"q", "scale"}`` from :func:`quantize_attn_params`) route the four
+attention matmuls through the blockwise int8/int4 dequant GEMM kernel.
 """
 from __future__ import annotations
 
@@ -37,12 +43,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.decode.paged_cache import chunk_write_slots, write_slots
+from repro.decode.paged_cache import (chunk_write_slots, quantize_kv,
+                                      write_slots)
 from repro.kernels import ref
 from repro.kernels.paged_decode_attention import paged_decode_attention
+from repro.kernels.paged_prefill_attention import paged_prefill_attention
+from repro.kernels.quant_matmul import (dequantize_blockwise, infer_bits,
+                                        quant_matmul, quantize_blockwise)
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models.model import Model, SemanticModel
+
+#: the serving-side projection weights eligible for blockwise quantization
+ATTN_PROJ = ("wq", "wk", "wv", "wo")
 
 
 def supports_paged_decode(model) -> bool:
@@ -51,14 +64,103 @@ def supports_paged_decode(model) -> bool:
     return getattr(model, "supports_single_step_prefill", False)
 
 
+def quantize_attn_params(params, bits: int):
+    """Serving-side blockwise weight quantization of the attention
+    projections (wq/wk/wv/wo) in every block of ``params``.
+
+    Returns ``(new_params, telemetry)``: a NEW params tree (the caller's
+    f32 params are untouched — train/legacy paths keep using them) where
+    each projection leaf becomes a ``{"q", "scale"}`` dict consumed by
+    :func:`_proj`, plus max/mean absolute dequantization error over all
+    quantized weights.  Norms, embeddings and FFN weights stay f32 (the
+    projections are the per-token serving matmuls the paged path owns).
+    """
+    errs_max, errs_sum, errs_n = [], [], 0
+    def q_one(w):
+        nonlocal errs_n
+        q, s = quantize_blockwise(w, bits=bits)
+        deq = dequantize_blockwise(q, s, bits=bits)
+        err = jnp.abs(deq - w.astype(jnp.float32))
+        errs_max.append(jnp.max(err))
+        errs_sum.append(jnp.sum(err))
+        errs_n += err.size
+        return {"q": q, "scale": s}
+
+    new_blocks = {}
+    for pos, blk in params["blocks"].items():
+        nb = dict(blk)
+        mix = dict(blk["mix"])
+        for name in ATTN_PROJ:
+            mix[name] = q_one(mix[name])
+        nb["mix"] = mix
+        new_blocks[pos] = nb
+    new_params = dict(params)
+    new_params["blocks"] = new_blocks
+    tele = {
+        "weight_quant_bits": bits,
+        "weight_quant_max_err": round(float(jnp.max(jnp.stack(errs_max))), 6),
+        "weight_quant_mean_err": round(
+            float(jnp.sum(jnp.stack(errs_sum))) / max(errs_n, 1), 6),
+    }
+    return new_params, tele
+
+
+def _proj(x, w, interpret: bool):
+    """x [B, S, D] @ w — w is either a plain f32 matrix or a quantized
+    ``{"q", "scale"}`` dict, routed through the blockwise dequant GEMM
+    (Pallas kernel on TPU/interpret, jnp dequant reference elsewhere)."""
+    if not isinstance(w, dict):
+        return x @ w
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    if interpret or jax.default_backend() == "tpu":
+        out = quant_matmul(xf, w["q"], w["scale"], interpret=interpret)
+    else:
+        out = ref.quant_matmul_ref(xf, w["q"], w["scale"],
+                                   bits=infer_bits(d, w["q"]))
+    return out.reshape(b, s, -1)
+
+
 def _attend(q, k_pool, v_pool, block_tables, valid_lens, softcap,
-            interpret: bool):
+            interpret: bool, k_scale=None, v_scale=None):
     if interpret or jax.default_backend() == "tpu":
         return paged_decode_attention(q, k_pool, v_pool, block_tables,
-                                      valid_lens, softcap=softcap,
+                                      valid_lens, k_scale=k_scale,
+                                      v_scale=v_scale, softcap=softcap,
                                       interpret=interpret)
     return ref.paged_decode_attention_ref(q, k_pool, v_pool, block_tables,
-                                          valid_lens, softcap=softcap)
+                                          valid_lens, k_scale=k_scale,
+                                          v_scale=v_scale, softcap=softcap)
+
+
+def _chunk_attend(q, k_pool, v_pool, block_tables, positions, softcap,
+                  interpret: bool, k_scale=None, v_scale=None):
+    if interpret or jax.default_backend() == "tpu":
+        return paged_prefill_attention(q, k_pool, v_pool, block_tables,
+                                       positions, k_scale=k_scale,
+                                       v_scale=v_scale, softcap=softcap,
+                                       interpret=interpret)
+    return ref.paged_prefill_attention_ref(q, k_pool, v_pool, block_tables,
+                                           positions, k_scale=k_scale,
+                                           v_scale=v_scale, softcap=softcap)
+
+
+def _scatter_kv(pool, k, v, wb, wo):
+    """Scatter new K/V into their (wb, wo) slots, quantizing on write when
+    the pool carries int8 code + scale leaves.  Per-token scales mean each
+    written slot depends only on its own K/V vector — chunk prefill, decode
+    steps and COW copies all commit identical bytes for identical tokens."""
+    if "k_scale" in pool:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        return {
+            "k": pool["k"].at[wb, wo].set(kq),
+            "k_scale": pool["k_scale"].at[wb, wo].set(ks),
+            "v": pool["v"].at[wb, wo].set(vq),
+            "v_scale": pool["v_scale"].at[wb, wo].set(vs),
+        }
+    return {"k": pool["k"].at[wb, wo].set(k.astype(pool["k"].dtype)),
+            "v": pool["v"].at[wb, wo].set(v.astype(pool["v"].dtype))}
 
 
 def _paged_attn(params, x, cfg: ArchConfig, *, positions, pool, block_tables,
@@ -67,37 +169,38 @@ def _paged_attn(params, x, cfg: ArchConfig, *, positions, pool, block_tables,
     into (wb, wo) write slots, then attend through the block table."""
     b, s, _ = x.shape                       # s == 1
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    q = (x @ params["wq"]).reshape(b, s, h, hd)
-    k = (x @ params["wk"]).reshape(b, s, kv, hd)
-    v = (x @ params["wv"]).reshape(b, s, kv, hd)
+    q = _proj(x, params["wq"], interpret).reshape(b, s, h, hd)
+    k = _proj(x, params["wk"], interpret).reshape(b, s, kv, hd)
+    v = _proj(x, params["wv"], interpret).reshape(b, s, kv, hd)
     q = L.apply_rope(q, positions, cfg.rope_theta)
     k = L.apply_rope(k, positions, cfg.rope_theta)
-    pk = pool["k"].at[wb, wo].set(k[:, 0].astype(pool["k"].dtype))
-    pv = pool["v"].at[wb, wo].set(v[:, 0].astype(pool["v"].dtype))
-    out = _attend(q[:, 0], pk, pv, block_tables, valid_lens,
-                  cfg.attn_softcap, interpret)
-    out = out.reshape(b, s, h * hd) @ params["wo"]
-    return out, {"k": pk, "v": pv}
+    npool = _scatter_kv(pool, k[:, 0], v[:, 0], wb, wo)
+    out = _attend(q[:, 0], npool["k"], npool["v"], block_tables, valid_lens,
+                  cfg.attn_softcap, interpret,
+                  k_scale=npool.get("k_scale"), v_scale=npool.get("v_scale"))
+    out = _proj(out.reshape(b, s, h * hd), params["wo"], interpret)
+    return out, npool
 
 
 def _paged_chunk_attn(params, x, cfg: ArchConfig, *, positions, pool,
-                      block_tables, wb, wo):
+                      block_tables, wb, wo, interpret: bool):
     """Chunk GQA attention against the paged pool: scatter the chunk's K/V
     into their (wb, wo) slots, then attend through the block table with the
     absolute-position causal mask (cached prefix + in-chunk triangle)."""
     b, s, _ = x.shape                       # s == chunk
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    q = (x @ params["wq"]).reshape(b, s, h, hd)
-    k = (x @ params["wk"]).reshape(b, s, kv, hd)
-    v = (x @ params["wv"]).reshape(b, s, kv, hd)
+    q = _proj(x, params["wq"], interpret).reshape(b, s, h, hd)
+    k = _proj(x, params["wk"], interpret).reshape(b, s, kv, hd)
+    v = _proj(x, params["wv"], interpret).reshape(b, s, kv, hd)
     q = L.apply_rope(q, positions, cfg.rope_theta)
     k = L.apply_rope(k, positions, cfg.rope_theta)
-    pk = pool["k"].at[wb, wo].set(k.astype(pool["k"].dtype))
-    pv = pool["v"].at[wb, wo].set(v.astype(pool["v"].dtype))
-    out = ref.paged_prefill_attention_ref(q, pk, pv, block_tables, positions,
-                                          softcap=cfg.attn_softcap)
-    out = out.reshape(b, s, h * hd) @ params["wo"]
-    return out, {"k": pk, "v": pv}
+    npool = _scatter_kv(pool, k, v, wb, wo)
+    out = _chunk_attend(q, npool["k"], npool["v"], block_tables, positions,
+                        cfg.attn_softcap, interpret,
+                        k_scale=npool.get("k_scale"),
+                        v_scale=npool.get("v_scale"))
+    out = _proj(out.reshape(b, s, h * hd), params["wo"], interpret)
+    return out, npool
 
 
 def _stack_body(cfg: ArchConfig, h, sb_params, sb_pool, attn_fn):
@@ -153,7 +256,7 @@ def _paged_step_one(model: Model, params, pool, tokens, block_tables,
 
 
 def _paged_chunk_one(model: Model, params, pool, tokens, starts, n_tok,
-                     block_tables):
+                     block_tables, *, interpret: bool = False):
     """Single-branch chunked prefill: commit ``tokens`` [B, C] at absolute
     positions ``starts + [0..C)`` into the paged pool and return the logits
     at each lane's last valid chunk position.  Padded token slots (>= n_tok)
@@ -169,7 +272,7 @@ def _paged_chunk_one(model: Model, params, pool, tokens, starts, n_tok,
         sb_params, sb_pool = xs
         attn = lambda p, hn, entry: _paged_chunk_attn(
             p, hn, cfg, positions=positions, pool=entry,
-            block_tables=block_tables, wb=wb, wo=wo)
+            block_tables=block_tables, wb=wb, wo=wo, interpret=interpret)
         return _stack_body(cfg, h, sb_params, sb_pool, attn)
 
     x, new_pool = jax.lax.scan(body, x, (params["blocks"], pool))
@@ -197,7 +300,7 @@ def paged_decode_logits(model, params, pool, tokens, block_tables, lengths,
 
 
 # ---------------------------------------------------------------- factories
-def make_prefill_chunk_fn(model):
+def make_prefill_chunk_fn(model, *, interpret: bool = False):
     """(params, pool, toks [W, C], starts [W], n_tok [W], block_tables
     [W, NB]) -> ([W, vocab] last-valid-position logits, new_pool).
 
@@ -210,7 +313,8 @@ def make_prefill_chunk_fn(model):
     if isinstance(model, SemanticModel):
         def chunk(params, pool, toks, starts, n_tok, block_tables):
             step = lambda p, c: _paged_chunk_one(
-                model.branch, p, c, toks, starts, n_tok, block_tables)
+                model.branch, p, c, toks, starts, n_tok, block_tables,
+                interpret=interpret)
             logits, new_pool = jax.vmap(step)(params, pool)
             bb, b, v = logits.shape
             return (jnp.transpose(logits, (1, 0, 2)).reshape(b, bb * v),
@@ -219,7 +323,7 @@ def make_prefill_chunk_fn(model):
 
     def chunk(params, pool, toks, starts, n_tok, block_tables):
         return _paged_chunk_one(model, params, pool, toks, starts, n_tok,
-                                block_tables)
+                                block_tables, interpret=interpret)
 
     return chunk
 

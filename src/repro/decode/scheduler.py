@@ -40,8 +40,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.decode.paged_cache import (NULL_BLOCK, BlockAllocator, PrefixIndex,
-                                      copy_blocks)
+                                      copy_blocks, pool_block_bytes,
+                                      quantize_pool)
 from repro.decode.paged_model import (make_decode_fn, make_prefill_chunk_fn,
+                                      quantize_attn_params,
                                       supports_paged_decode)
 from repro.engine.types import next_pow2
 
@@ -77,11 +79,27 @@ class PagedArmScheduler:
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  scan_tokens: int = 8, util_floor: float = 0.5,
                  prefill_chunk: int = 32, prefix_sharing: bool = True,
-                 watermark: float = 0.0, interpret: bool = False):
+                 watermark: float = 0.0, interpret: bool = False,
+                 kv_dtype: str = "f32", weight_quant: Optional[str] = None):
         if not supports_paged_decode(model):
             raise ValueError("model does not support paged decode "
                              "(needs pure global-attention mixers)")
+        if kv_dtype not in ("f32", "int8"):
+            raise ValueError(f"kv_dtype must be 'f32' or 'int8', "
+                             f"got {kv_dtype!r}")
+        if weight_quant not in (None, "int8", "int4"):
+            raise ValueError(f"weight_quant must be None, 'int8' or 'int4', "
+                             f"got {weight_quant!r}")
         self.model = model
+        self.kv_dtype = kv_dtype
+        self.weight_quant = weight_quant
+        self.quant_telemetry: Dict[str, float] = {}
+        if weight_quant is not None:
+            # quantize a PRIVATE copy of the attention projections — the
+            # caller's f32 params stay untouched (other arms / legacy paths
+            # may share them)
+            params, self.quant_telemetry = quantize_attn_params(
+                params, int(weight_quant[3:]))
         self.params = params
         self.n_lanes = n_lanes
         self.block_size = block_size
@@ -100,6 +118,12 @@ class PagedArmScheduler:
             num_blocks, block_size,
             on_evict=lambda blk, key: self.index.drop(key))
         self.pool = model.init_cache(num_blocks, block_size)
+        self.kv_block_bytes_f32 = pool_block_bytes(self.pool)
+        if kv_dtype == "int8":
+            # int8 codes + one f32 scale per (token slot, kv head): the
+            # scatter/attend paths key on the "k_scale" leaves
+            self.pool = quantize_pool(self.pool)
+        self.kv_block_bytes = pool_block_bytes(self.pool)
 
         self.block_tables = np.full((n_lanes, self.max_blocks), NULL_BLOCK,
                                     np.int32)
@@ -389,7 +413,9 @@ class PagedArmScheduler:
             n_tok[row] = k
             bt[row] = self.block_tables[li]
         fn = self._get_jitted(
-            "prefill", (w, c), lambda: make_prefill_chunk_fn(self.model))
+            "prefill", (w, c),
+            lambda: make_prefill_chunk_fn(self.model,
+                                          interpret=self.interpret))
         logits, self.pool = fn(self.params, self.pool, jnp.asarray(toks),
                                jnp.asarray(starts), jnp.asarray(n_tok),
                                jnp.asarray(bt))
@@ -495,5 +521,11 @@ class PagedArmScheduler:
             "cow_copies": self.cow_copies,
             "preemptions": self.preemptions,
             "spilled_blocks": self.spilled_blocks,
+            "kv_block_bytes": self.kv_block_bytes,
+            "kv_block_bytes_f32": self.kv_block_bytes_f32,
+            # effective-capacity multiplier: KV blocks per byte vs f32
+            "kv_capacity_x": round(
+                self.kv_block_bytes_f32 / max(self.kv_block_bytes, 1), 4),
+            **self.quant_telemetry,
             **{f"compile_{k}": v for k, v in self.compile_stats.items()},
         }

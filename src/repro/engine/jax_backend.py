@@ -50,9 +50,15 @@ class JaxBackend:
                  scan_tokens: int = 8, block_size: int = 16,
                  num_blocks: Optional[int] = None,
                  prefill_chunk: int = 32, prefix_sharing: bool = True,
-                 watermark: float = 0.0):
+                 watermark: float = 0.0, kv_dtype: str = "f32",
+                 weight_quant: Optional[str] = None):
         if decode not in ("auto", "paged", "legacy"):
             raise ValueError(f"decode={decode!r}; expected auto|paged|legacy")
+        if kv_dtype not in ("f32", "int8"):
+            raise ValueError(f"kv_dtype={kv_dtype!r}; expected f32|int8")
+        if weight_quant not in (None, "int8", "int4"):
+            raise ValueError(f"weight_quant={weight_quant!r}; "
+                             "expected None|int8|int4")
         self.cfg = cfg
         self.mesh = mesh
         self.cache_len = cache_len
@@ -64,6 +70,8 @@ class JaxBackend:
         self.prefill_chunk = prefill_chunk
         self.prefix_sharing = prefix_sharing
         self.watermark = watermark
+        self.kv_dtype = kv_dtype
+        self.weight_quant = weight_quant
         self._init_key = jax.random.PRNGKey(seed + 1)
         self.runners: Dict[int, object] = {}
         self.params: Dict[int, object] = {}
@@ -115,7 +123,8 @@ class JaxBackend:
                 num_blocks=self.num_blocks, scan_tokens=self.scan_tokens,
                 prefill_chunk=self.prefill_chunk,
                 prefix_sharing=self.prefix_sharing,
-                watermark=self.watermark)
+                watermark=self.watermark, kv_dtype=self.kv_dtype,
+                weight_quant=self.weight_quant)
 
     # ------------------------------------------------------------- lifecycle
     @property
@@ -290,11 +299,19 @@ class JaxBackend:
                 f"arm{a}:b{b}xs{s}": n
                 for (a, b, s), n in sorted(self._legacy_buckets.items())}
         if self._paged:
+            # per-pool ratios/errors are properties of each arm's layout, not
+            # flow counters: report the max across arms instead of a sum
+            ratio_keys = ("kv_block_bytes", "kv_block_bytes_f32",
+                          "kv_capacity_x", "weight_quant_bits",
+                          "weight_quant_max_err", "weight_quant_mean_err")
             agg: Dict[str, float] = {}
             for sched in self._paged.values():
                 for k, v in sched.stats().items():
                     if k in ("batch_occupancy", "mean_active_lanes",
                              "prefix_hit_rate"):
+                        continue
+                    if k in ratio_keys:
+                        agg[k] = max(agg.get(k, v), v)
                         continue
                     agg[k] = agg.get(k, 0) + v
             tokens = sum(s.decoded_tokens for s in self._paged.values())

@@ -135,6 +135,12 @@ class EngineStats:
     cow_copies: int = 0
     preemptions: int = 0
     spilled_blocks: int = 0
+    # quantized-serving telemetry (kv_dtype="int8" / weight_quant knobs):
+    # effective KV-capacity multiplier vs f32 (1.0 when unquantized) and the
+    # max absolute weight dequantization error across quantized projections
+    kv_capacity_x: float = 1.0
+    kv_block_bytes: int = 0
+    weight_quant_max_err: float = 0.0
 
     def record(self, o: Outcome) -> None:
         self.completed += 1

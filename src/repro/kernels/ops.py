@@ -1,13 +1,17 @@
 """jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True off-TPU so the kernels VALIDATE on CPU; on a
-real TPU backend the compiled kernel runs.  ``use_kernels(False)`` routes
-every op to its pure-jnp oracle (repro.kernels.ref) — the fsdp/semantic/
-pipeline runners call through these ops so the kernel layer is swappable.
+Every op takes an explicit ``interpret`` override (a static argname):
+``None`` auto-detects per call — True off-TPU so the kernels VALIDATE on
+CPU, False on a real TPU backend where the compiled kernel runs — while
+True/False force one path, so tests can exercise both without env juggling.
+``use_kernels(False)`` routes every op to its pure-jnp oracle
+(repro.kernels.ref) — the fsdp/semantic/pipeline runners call through these
+ops so the kernel layer is swappable.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 
@@ -16,6 +20,7 @@ from repro.kernels.block_diag_matmul import block_diag_matmul as _bdm
 from repro.kernels.decode_attention import decode_attention as _dec
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.moe_gmm import moe_gmm as _gmm
+from repro.kernels.quant_matmul import quant_matmul as _qmm
 from repro.kernels.ssm_scan import ssm_scan as _scan
 
 _STATE = {"enabled": True}
@@ -25,44 +30,57 @@ def use_kernels(enabled: bool):
     _STATE["enabled"] = bool(enabled)
 
 
-def _interpret() -> bool:
+def _interpret(override: Optional[bool] = None) -> bool:
+    if override is not None:
+        return bool(override)
     return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "softcap"))
-def flash_attention(q, k, v, causal=True, window=0, softcap=0.0):
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "interpret"))
+def flash_attention(q, k, v, causal=True, window=0, softcap=0.0,
+                    interpret=None):
     if not _STATE["enabled"]:
         return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
                                        softcap=softcap)
     return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
-                  interpret=_interpret())
+                  interpret=_interpret(interpret))
 
 
-@jax.jit
-def block_diag_matmul(x, w):
+@partial(jax.jit, static_argnames=("interpret",))
+def block_diag_matmul(x, w, interpret=None):
     if not _STATE["enabled"]:
         return ref.block_diag_matmul_ref(x, w)
-    return _bdm(x, w, interpret=_interpret())
+    return _bdm(x, w, interpret=_interpret(interpret))
 
 
-@jax.jit
-def moe_gmm(x, w):
+@partial(jax.jit, static_argnames=("interpret",))
+def moe_gmm(x, w, interpret=None):
     if not _STATE["enabled"]:
         return ref.moe_gmm_ref(x, w)
-    return _gmm(x, w, interpret=_interpret())
+    return _gmm(x, w, interpret=_interpret(interpret))
 
 
-@jax.jit
-def ssm_scan(a, b):
+@partial(jax.jit, static_argnames=("interpret",))
+def ssm_scan(a, b, interpret=None):
     if not _STATE["enabled"]:
         return ref.ssm_scan_ref(a, b)
-    return _scan(a, b, interpret=_interpret())
+    return _scan(a, b, interpret=_interpret(interpret))
 
 
-@partial(jax.jit, static_argnames=("softcap",))
-def decode_attention(q, k_cache, v_cache, length, softcap=0.0):
+@partial(jax.jit, static_argnames=("softcap", "interpret"))
+def decode_attention(q, k_cache, v_cache, length, softcap=0.0,
+                     interpret=None):
     if not _STATE["enabled"]:
         return ref.decode_attention_ref(q, k_cache, v_cache, length,
                                         softcap=softcap)
     return _dec(q, k_cache, v_cache, length, softcap=softcap,
-                interpret=_interpret())
+                interpret=_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def quant_matmul(x, q, scales, interpret=None):
+    """Blockwise int8/int4 dequant GEMM (bit width inferred from the packed
+    code-matrix shape)."""
+    if not _STATE["enabled"]:
+        return ref.quant_matmul_ref(x, q, scales)
+    return _qmm(x, q, scales, interpret=_interpret(interpret))

@@ -30,10 +30,16 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _paged_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, *,
-                  block_size: int, scale: float, softcap: float):
+def _paged_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, *rest,
+                  block_size: int, scale: float, softcap: float,
+                  quantized: bool):
     # len_ref: [1]; bt_ref: [NB]; q_ref: [rep, hd];
-    # k_ref/v_ref: [P*bs, hd] (pool for this kv head); o_ref: [rep, hd]
+    # k_ref/v_ref: [P*bs, hd] (pool for this kv head); with quantized=True
+    # two [P*bs, 1] scale refs precede o_ref.  o_ref: [rep, hd]
+    if quantized:
+        ks_ref, vs_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
     rep, hd = q_ref.shape
     nb = bt_ref.shape[0]
     q = q_ref[...].astype(jnp.float32) * scale
@@ -46,6 +52,15 @@ def _paged_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, *,
                             slice(None)))
         v = pl.load(v_ref, (pl.dslice(bid * block_size, block_size),
                             slice(None)))
+        if quantized:
+            # dequant epilogue: int8 codes widen in-register, one f32 scale
+            # per (token slot, kv head)
+            k = k.astype(jnp.float32) * pl.load(
+                ks_ref, (pl.dslice(bid * block_size, block_size),
+                         slice(None)))
+            v = v.astype(jnp.float32) * pl.load(
+                vs_ref, (pl.dslice(bid * block_size, block_size),
+                         slice(None)))
         s = q @ k.astype(jnp.float32).T                   # [rep, bs]
         if softcap:
             s = jnp.tanh(s / softcap) * softcap
@@ -69,16 +84,20 @@ def _paged_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, *,
 
 
 def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
-                           softcap: float = 0.0, interpret: bool = False):
+                           k_scale=None, v_scale=None, softcap: float = 0.0,
+                           interpret: bool = False):
     """q: [B, H, hd] (one token per sequence); k/v_pool: [P, bs, K, hd]
     physical block pools; block_tables: [B, NB] int32; lengths: [B] valid
-    token counts.  Returns [B, H, hd]."""
+    token counts.  Optional ``k_scale``/``v_scale`` [P, bs, K] dequantize
+    int8 pools in-register.  Returns [B, H, hd]."""
     b, h, hd = q.shape
     p_blocks, bs, kh, _ = k_pool.shape
     nb = block_tables.shape[1]
     assert h % kh == 0
     rep = h // kh
     scale = 1.0 / math.sqrt(hd)
+    quantized = k_scale is not None
+    assert (v_scale is not None) == quantized
 
     qg = q.reshape(b, kh, rep, hd)
     # pool per kv head, flattened over (block, slot) so a physical block j is
@@ -86,21 +105,35 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
     kt = k_pool.transpose(2, 0, 1, 3).reshape(kh, p_blocks * bs, hd)
     vt = v_pool.transpose(2, 0, 1, 3).reshape(kh, p_blocks * bs, hd)
 
+    in_specs = [
+        pl.BlockSpec((1,), lambda bi, ki: (bi,)),
+        pl.BlockSpec((None, nb), lambda bi, ki: (bi, 0)),
+        pl.BlockSpec((None, None, rep, hd), lambda bi, ki: (bi, ki, 0, 0)),
+        pl.BlockSpec((None, p_blocks * bs, hd), lambda bi, ki: (ki, 0, 0)),
+        pl.BlockSpec((None, p_blocks * bs, hd), lambda bi, ki: (ki, 0, 0)),
+    ]
+    args = [lengths.astype(jnp.int32), block_tables.astype(jnp.int32),
+            qg, kt, vt]
+    if quantized:
+        kst = k_scale.transpose(2, 0, 1).reshape(kh, p_blocks * bs, 1) \
+            .astype(jnp.float32)
+        vst = v_scale.transpose(2, 0, 1).reshape(kh, p_blocks * bs, 1) \
+            .astype(jnp.float32)
+        in_specs += [
+            pl.BlockSpec((None, p_blocks * bs, 1), lambda bi, ki: (ki, 0, 0)),
+            pl.BlockSpec((None, p_blocks * bs, 1), lambda bi, ki: (ki, 0, 0)),
+        ]
+        args += [kst, vst]
+
     kernel = functools.partial(_paged_kernel, block_size=bs, scale=scale,
-                               softcap=softcap)
+                               softcap=softcap, quantized=quantized)
     out = pl.pallas_call(
         kernel,
         grid=(b, kh),
-        in_specs=[
-            pl.BlockSpec((1,), lambda bi, ki: (bi,)),
-            pl.BlockSpec((None, nb), lambda bi, ki: (bi, 0)),
-            pl.BlockSpec((None, None, rep, hd), lambda bi, ki: (bi, ki, 0, 0)),
-            pl.BlockSpec((None, p_blocks * bs, hd), lambda bi, ki: (ki, 0, 0)),
-            pl.BlockSpec((None, p_blocks * bs, hd), lambda bi, ki: (ki, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, None, rep, hd),
                                lambda bi, ki: (bi, ki, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, kh, rep, hd), q.dtype),
         interpret=interpret,
-    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32), qg, kt, vt)
+    )(*args)
     return out.reshape(b, h, hd)

@@ -1,0 +1,141 @@
+"""Paged chunked-prefill attention — Pallas TPU kernel.
+
+The chunked-prefill hot path commits C prompt tokens per lane into the paged
+pool and then attends each chunk token over its cached prefix AND the
+in-chunk causal triangle.  The XLA reference does this with a dense
+``k_pool[block_tables]`` gather — materializing [B, NB*bs, K, hd] per layer.
+This kernel walks the block table instead (same pattern as
+``paged_decode_attention``): one physical block per step folded into the
+running flash (max, sum, acc) state, the GQA group's queries riding
+together, and the absolute-position causal rule ``kpos <= qpos`` masking
+the cached prefix and the in-chunk triangle in one comparison (the caller
+scatters the chunk's K/V before attending, so a query's own token is always
+a valid key — no empty softmax rows).
+
+A dequant epilogue handles int8 KV blocks: when per-token-slot scales are
+passed, gathered code blocks are widened and scaled in-register, so the
+same kernel serves f32 and quantized pools.
+
+Padded query slots (lanes past their valid ``n_tok``) have their writes
+routed to the null block by the caller; their output rows are garbage by
+design and never read.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _chunk_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, *rest,
+                  block_size: int, scale: float, softcap: float,
+                  quantized: bool):
+    # pos_ref: [C]; bt_ref: [NB]; q_ref: [rep, C, hd];
+    # k_ref/v_ref: [P*bs, hd] (this kv head's pool); with quantized=True two
+    # extra [P*bs, 1] scale refs precede o_ref.  o_ref: [rep, C, hd]
+    if quantized:
+        ks_ref, vs_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
+    rep, c, hd = q_ref.shape
+    nb = bt_ref.shape[0]
+    q = q_ref[...].astype(jnp.float32).reshape(rep * c, hd) * scale
+    qpos = pos_ref[...]                                      # [C]
+    qpos_r = jnp.broadcast_to(qpos[None, :], (rep, c)).reshape(rep * c)
+
+    def body(j, carry):
+        acc, m_prev, l_prev = carry
+        bid = bt_ref[j]                                      # physical block
+        k = pl.load(k_ref, (pl.dslice(bid * block_size, block_size),
+                            slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(bid * block_size, block_size),
+                            slice(None))).astype(jnp.float32)
+        if quantized:
+            k = k * pl.load(ks_ref, (pl.dslice(bid * block_size, block_size),
+                                     slice(None)))
+            v = v * pl.load(vs_ref, (pl.dslice(bid * block_size, block_size),
+                                     slice(None)))
+        s = q @ k.T                                          # [rep*C, bs]
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = j * block_size + jax.lax.iota(jnp.int32, block_size)
+        s = jnp.where(kpos[None, :] <= qpos_r[:, None], s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = alpha * l_prev + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_cur, l_cur
+
+    # walk only the logical blocks at or below the chunk's last position
+    n_eff = jnp.minimum(jnp.asarray(nb, jnp.int32),
+                        pl.cdiv(jnp.max(qpos) + 1, block_size)) \
+        .astype(jnp.int32)
+    acc0 = jnp.zeros((rep * c, hd), jnp.float32)
+    m0 = jnp.full((rep * c,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((rep * c,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, n_eff, body, (acc0, m0, l0))
+    out = acc / jnp.maximum(l, 1e-20)[:, None]
+    o_ref[...] = out.reshape(rep, c, hd).astype(o_ref.dtype)
+
+
+def paged_prefill_attention(q, k_pool, v_pool, block_tables, positions, *,
+                            k_scale=None, v_scale=None, softcap: float = 0.0,
+                            interpret: bool = False):
+    """q: [B, C, H, hd] (one chunk per lane at absolute ``positions``
+    [B, C]); k/v_pool: [P, bs, K, hd] pools that already contain this
+    chunk's K/V; block_tables: [B, NB].  Optional ``k_scale``/``v_scale``
+    [P, bs, K] dequantize int8 pools in-register.  Returns [B, C, H, hd]."""
+    b, c, h, hd = q.shape
+    p_blocks, bs, kh, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    assert h % kh == 0
+    rep = h // kh
+    scale = 1.0 / math.sqrt(hd)
+    quantized = k_scale is not None
+    assert (v_scale is not None) == quantized
+
+    # queries grouped by kv head (h = kv_head * rep + r, kv head major)
+    qg = q.transpose(0, 2, 1, 3).reshape(b, kh, rep, c, hd)
+    # pool per kv head, flattened over (block, slot): physical block j is
+    # the contiguous row range [j*bs, (j+1)*bs)
+    kt = k_pool.transpose(2, 0, 1, 3).reshape(kh, p_blocks * bs, hd)
+    vt = v_pool.transpose(2, 0, 1, 3).reshape(kh, p_blocks * bs, hd)
+
+    in_specs = [
+        pl.BlockSpec((None, c), lambda bi, ki: (bi, 0)),
+        pl.BlockSpec((None, nb), lambda bi, ki: (bi, 0)),
+        pl.BlockSpec((None, None, rep, c, hd), lambda bi, ki: (bi, ki, 0, 0, 0)),
+        pl.BlockSpec((None, p_blocks * bs, hd), lambda bi, ki: (ki, 0, 0)),
+        pl.BlockSpec((None, p_blocks * bs, hd), lambda bi, ki: (ki, 0, 0)),
+    ]
+    args = [positions.astype(jnp.int32), block_tables.astype(jnp.int32),
+            qg, kt, vt]
+    if quantized:
+        kst = k_scale.transpose(2, 0, 1).reshape(kh, p_blocks * bs, 1) \
+            .astype(jnp.float32)
+        vst = v_scale.transpose(2, 0, 1).reshape(kh, p_blocks * bs, 1) \
+            .astype(jnp.float32)
+        in_specs += [
+            pl.BlockSpec((None, p_blocks * bs, 1), lambda bi, ki: (ki, 0, 0)),
+            pl.BlockSpec((None, p_blocks * bs, 1), lambda bi, ki: (ki, 0, 0)),
+        ]
+        args += [kst, vst]
+
+    kernel = functools.partial(_chunk_kernel, block_size=bs, scale=scale,
+                               softcap=softcap, quantized=quantized)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kh),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((None, None, rep, c, hd),
+                               lambda bi, ki: (bi, ki, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, rep, c, hd), q.dtype),
+        interpret=interpret,
+    )(*args)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, c, h, hd)

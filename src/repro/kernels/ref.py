@@ -81,8 +81,17 @@ def decode_attention_ref(q, k_cache, v_cache, length, *, softcap=0.0):
     return jnp.einsum("bhl,blhd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def dequant_pool_ref(pool, scale):
+    """Dequantize an int8 KV pool [P, bs, K, hd] with per-token-slot scales
+    [P, bs, K] (one symmetric scale per token per kv head).  Identity for
+    ``scale=None`` (f32 pools)."""
+    if scale is None:
+        return pool
+    return pool.astype(jnp.float32) * scale[..., None]
+
+
 def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
-                               softcap=0.0):
+                               k_scale=None, v_scale=None, softcap=0.0):
     """Dense-gather oracle for the paged decode kernel.
 
     q: [B, H, hd]; k/v_pool: [P, bs, K, hd] physical block pools;
@@ -91,9 +100,10 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
     blocks into a dense [B, NB*bs, K, hd] cache and defers to
     ``decode_attention_ref``.  Tables of different sequences may alias the
     same physical blocks (prefix sharing) — the gather is read-only.
+    ``k_scale``/``v_scale`` [P, bs, K] dequantize int8 pools first.
     """
-    k = k_pool[block_tables]                    # [B, NB, bs, K, hd]
-    v = v_pool[block_tables]
+    k = dequant_pool_ref(k_pool, k_scale)[block_tables]  # [B, NB, bs, K, hd]
+    v = dequant_pool_ref(v_pool, v_scale)[block_tables]
     b, nb, bs, kh, hd = k.shape
     k = k.reshape(b, nb * bs, kh, hd)
     v = v.reshape(b, nb * bs, kh, hd)
@@ -101,7 +111,7 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
 
 
 def paged_prefill_attention_ref(q, k_pool, v_pool, block_tables, positions, *,
-                                softcap=0.0):
+                                k_scale=None, v_scale=None, softcap=0.0):
     """Chunked-prefill attention against the paged pool (XLA path).
 
     q: [B, C, H, hd] — one chunk of C query tokens per lane at absolute
@@ -112,10 +122,11 @@ def paged_prefill_attention_ref(q, k_pool, v_pool, block_tables, positions, *,
     rule is just ``kpos <= qpos`` — it spans the cached prefix AND the
     in-chunk causal triangle in one mask.  Returns [B, C, H, hd]; rows of
     padded query slots are garbage (their writes routed to the null block
-    and their outputs are never read).
+    and their outputs are never read).  ``k_scale``/``v_scale`` [P, bs, K]
+    dequantize int8 pools first.
     """
-    kd = k_pool[block_tables]                   # [B, NB, bs, K, hd]
-    vd = v_pool[block_tables]
+    kd = dequant_pool_ref(k_pool, k_scale)[block_tables]  # [B, NB, bs, K, hd]
+    vd = dequant_pool_ref(v_pool, v_scale)[block_tables]
     b, nb, bs, kh, hd = kd.shape
     kd = kd.reshape(b, nb * bs, kh, hd)
     vd = vd.reshape(b, nb * bs, kh, hd)
@@ -133,3 +144,12 @@ def paged_prefill_attention_ref(q, k_pool, v_pool, block_tables, positions, *,
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bkhd->bqhd", p,
                       vd.astype(jnp.float32)).astype(q.dtype)
+
+
+def quant_matmul_ref(x, q, scales, *, bits=None):
+    """Dequantize-then-matmul oracle for the blockwise quant GEMM kernel."""
+    from repro.kernels.quant_matmul import dequantize_blockwise, infer_bits
+    if bits is None:
+        bits = infer_bits(x.shape[-1], q)
+    w = dequantize_blockwise(q, scales, bits=bits)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

@@ -15,7 +15,9 @@ def run_smoke(*archs):
     env = dict(os.environ)
     env["PYTHONPATH"] = str(REPO / "src")
     env.pop("XLA_FLAGS", None)
-    env.pop("JAX_PLATFORMS", None)
+    # pin the platform: an inherited GPU/TPU selection (or an unset var on a
+    # machine with accelerators) would silently change what the smoke tests
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run(
         [sys.executable, str(REPO / "scripts" / "smoke_dist.py"), *archs],
         capture_output=True, text=True, timeout=1200, cwd=REPO, env=env)

@@ -142,7 +142,7 @@ print('OK')
     import os
     env = dict(os.environ)
     env["PYTHONPATH"] = str(repo / "src")
-    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"   # pin: don't inherit an accelerator choice
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=900, env=env)
     assert r.returncode == 0 and "OK" in r.stdout, r.stderr[-2000:]
@@ -179,7 +179,7 @@ print('OK', losses)
     import os
     env = dict(os.environ)
     env["PYTHONPATH"] = str(repo / "src")
-    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"   # pin: don't inherit an accelerator choice
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=900, env=env)
     assert r.returncode == 0 and "OK" in r.stdout, r.stderr[-2000:]
