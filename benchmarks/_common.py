@@ -1,0 +1,207 @@
+"""Shared trace builders and the best-of-N timing harness for the serving
+benchmarks (extracted from ``decode_throughput.py`` after four PRs of
+copy-paste growth; ``benchmarks/*`` import from here).
+
+Everything is seed-deterministic: a (builder, n_reqs, seed) triple always
+produces the identical wave/prompt/budget sequence, which is what lets
+``run_mode`` replay the same trace for warmup and timed passes and report
+warmup-delta counters.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _waves(n_reqs, rng, base: int = 2, lam: int = 4):
+    waves = []
+    left = n_reqs
+    while left:
+        # steady-state pressure: arrival waves sized to keep a backlog, so
+        # the schedulers differ in how they burn lanes, not in idle time
+        w = min(left, base + int(rng.poisson(lam)))
+        waves.append(w)
+        left -= w
+    return waves
+
+
+def build_trace(n_reqs: int, seed: int = 0):
+    """(wave sizes, requests): bursty Poisson waves with mixed budgets."""
+    from repro.engine import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_reqs):
+        plen = int(rng.integers(3, 9))
+        # bimodal budgets: mostly short interactive, a tail of long jobs —
+        # the regime where gang scheduling stalls short requests
+        max_new = int(rng.choice([2, 3, 4, 12, 16], p=[.3, .25, .2, .15, .1]))
+        reqs.append(Request(
+            rid=i, app_id=int(rng.integers(0, 3)),
+            tokens=rng.integers(0, 128, plen).astype(np.int32),
+            sla_s=float(rng.uniform(0.5, 4.0)), max_new=max_new))
+    return _waves(n_reqs, rng), reqs
+
+
+def build_shared_trace(n_reqs: int, seed: int = 0, *, n_families: int = 3,
+                       head_len: int = 96, tail_max: int = 8,
+                       pressure: bool = False):
+    """Shared-prefix Poisson trace: every request's prompt is one of
+    ``n_families`` common heads plus a short random tail — the regime where
+    join-wave prefill dominates and the prefix cache pays (multi-tenant
+    system prompts / per-app preambles on one split arm).
+
+    ``pressure=True`` swaps the budget/SLA mix for an adversarial one: a
+    tight-deadline short-job minority arriving into a loose-deadline
+    LONG-job majority — long loose lanes hold blocks across many scan
+    boundaries while tights arrive, which is the regime where EDF wants
+    preemption under a small pool."""
+    from repro.engine import Request
+    rng = np.random.default_rng(seed)
+    heads = [rng.integers(0, 128, head_len).astype(np.int32)
+             for _ in range(n_families)]
+    reqs = []
+    for i in range(n_reqs):
+        head = heads[int(rng.integers(n_families))]
+        tail = rng.integers(0, 128, int(rng.integers(1, tail_max))) \
+            .astype(np.int32)
+        if pressure:
+            tight = rng.random() < 0.3
+            max_new = int(rng.choice([2, 3])) if tight \
+                else int(rng.choice([6, 16]))
+            sla = 0.3 if tight else 8.0
+        else:
+            max_new = int(rng.choice([2, 3, 4, 6], p=[.35, .3, .2, .15]))
+            sla = float(rng.uniform(0.5, 4.0))
+        reqs.append(Request(
+            rid=i, app_id=int(rng.integers(0, 3)),
+            tokens=np.concatenate([head, tail]),
+            sla_s=sla, max_new=max_new))
+    return _waves(n_reqs, rng, 1, 2), reqs
+
+
+def build_mixed_trace(n_reqs: int, seed: int = 0):
+    """Mixed interactive/batch trace: a long-prompt prefill-heavy minority
+    (loose SLA, the batch jobs) arriving among short tight-SLA interactive
+    requests — the interference regime where colocated chunked prefill
+    stalls the decode scan and disaggregation separates the two."""
+    from repro.engine import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_reqs):
+        if rng.random() < 0.3:
+            plen = int(rng.integers(32, 49))
+            max_new = int(rng.choice([4, 8]))
+            sla = 8.0
+        else:
+            plen = int(rng.integers(3, 9))
+            max_new = int(rng.choice([2, 3, 4]))
+            sla = 0.5
+        reqs.append(Request(
+            rid=i, app_id=int(rng.integers(0, 3)),
+            tokens=rng.integers(0, 128, plen).astype(np.int32),
+            sla_s=sla, max_new=max_new))
+    return _waves(n_reqs, rng), reqs
+
+
+def run_mode(mode: str, trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
+             scan_tokens: int, cache_len: int = 32, block_size: int = 8,
+             prefix_sharing: bool = False, num_blocks=None,
+             kv_dtype: str = "f32", fleet=None, reps: int = 3) -> dict:
+    """Drive one serving configuration through warmup + ``reps`` identical
+    timed passes (best wall wins) and report per-pass warmup-delta
+    counters.  ``fleet="disagg"`` runs the prefill/decode worker pair with
+    cache-store block shipping instead of one colocated scheduler."""
+    from repro.engine import FixedPolicy, LAYER, PlacementEngine
+    from repro.engine.jax_backend import JaxBackend
+
+    backend = JaxBackend(cfg, mesh, cache_len=cache_len, max_batch=max_batch,
+                         decode="legacy" if mode == "gang" else "paged",
+                         block_size=block_size, scan_tokens=scan_tokens,
+                         prefix_sharing=prefix_sharing, num_blocks=num_blocks,
+                         kv_dtype=kv_dtype, fleet=fleet)
+    eng = PlacementEngine(FixedPolicy(LAYER, placement=None), backend)
+    # warmup: identical-profile passes (same seed -> same wave/prompt/scan
+    # buckets) so the timed region measures steady-state serving, not
+    # compilation.  With prefix sharing on, TWO passes: the first populates
+    # the cache, the second runs (and compiles) the hit-regime shapes the
+    # timed pass will reuse — the timed figure is the steady-state hit
+    # regime.
+    for _ in range(2 if prefix_sharing else 1):
+        warm_waves, warm_reqs = trace_fn(n_reqs, seed=0)
+        i = 0
+        for w in warm_waves:
+            eng.submit(warm_reqs[i:i + w])
+            i += w
+            eng.step()
+        eng.drain()
+    warm = eng.summary()
+
+    # timed phase: ``reps`` identical passes, best wall wins — the tiny
+    # traces finish in tens of milliseconds, where a single pass is
+    # scheduler-noise-dominated
+    walls = []
+    for _ in range(reps):
+        waves, reqs = trace_fn(n_reqs, seed=0)
+        t0 = time.perf_counter()
+        i = 0
+        for w in waves:
+            eng.submit(reqs[i:i + w])
+            i += w
+            eng.step()                  # interleave: arrivals land in-flight
+        eng.drain()
+        walls.append(time.perf_counter() - t0)
+    wall = min(walls)
+    m = eng.summary()
+    # response/SLA figures from the timed requests only — the warmup pass
+    # absorbs the compile stalls and must not contaminate them
+    lat = [r.latency_s for r in reqs]
+    viol = [r.latency_s > r.sla_s for r in reqs]
+    ttfts = [r.ttft_s for r in reqs if r.ttft_s > 0]
+
+    generated = sum(r.max_new for r in reqs)
+    if mode == "gang":
+        dispatches = (m["prefill_calls"] + m["decode_steps"])
+        warm_disp = warm["prefill_calls"] + warm["decode_steps"]
+    else:
+        dispatches = m["prefill_calls"] + m["decode_dispatches"]
+        warm_disp = warm["prefill_calls"] + warm["decode_dispatches"]
+    # count deltas span all reps passes — report per-pass figures
+    out = {
+        "completed": (m["completed"] - warm["completed"]) // reps,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round((generated) / wall, 2),
+        "dispatches_per_token": round(
+            (dispatches - warm_disp) / reps / generated, 4),
+        "batch_occupancy": m["batch_occupancy"],
+        "mean_response_s": round(float(np.mean(lat)), 4),
+        "p99_response_s": round(float(np.percentile(lat, 99)), 4),
+        "sla_violation": round(float(np.mean(viol)), 4),
+    }
+    if ttfts:
+        out["ttft_s"] = round(float(np.mean(ttfts)), 4)
+        out["p99_ttft_s"] = round(float(np.percentile(ttfts, 99)), 4)
+    if mode != "gang":
+        out["join_waves"] = m["join_waves"]
+        out["decode_dispatches"] = round(
+            (m["decode_dispatches"] - warm["decode_dispatches"]) / reps, 1)
+        out["compile_decode_misses"] = m["compile_decode_misses"]
+        out["compile_prefill_misses"] = m["compile_prefill_misses"]
+        # timed-phase cache behaviour (warmup deltas)
+        hit = m["prefix_hit_tokens"] - warm["prefix_hit_tokens"]
+        query = m["prefix_query_tokens"] - warm["prefix_query_tokens"]
+        out["prefix_hit_rate"] = round(hit / max(query, 1), 4)
+        out["cow_copies"] = round(
+            (m["cow_copies"] - warm["cow_copies"]) / reps, 1)
+        out["preemptions"] = round(
+            (m["preemptions"] - warm["preemptions"]) / reps, 1)
+        out["spilled_blocks"] = round(
+            (m["spilled_blocks"] - warm["spilled_blocks"]) / reps, 1)
+        out["kv_capacity_x"] = m["kv_capacity_x"]
+        out["kv_block_bytes"] = m["kv_block_bytes"]
+    if fleet is not None:
+        # cache-store wire telemetry, per timed pass
+        for k in ("blocks_shipped", "transfer_bytes", "ship_waves",
+                  "ship_skipped_blocks", "ship_deferred", "ship_requeues"):
+            out[k] = round((m[k] - warm[k]) / reps, 1)
+    return out

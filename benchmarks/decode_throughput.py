@@ -1,5 +1,6 @@
 """Decode-throughput benchmark: paged continuous batching vs gang scheduling,
-and prefix sharing vs the cold paged baseline.
+prefix sharing vs the cold paged baseline, and disaggregated prefill/decode
+vs the colocated paged path.
 
 Drives the SAME Poisson trace (bursty arrivals, heterogeneous prompt lengths
 and token budgets — the paper's dynamic-workload regime) through the
@@ -20,12 +21,17 @@ with the int8 KV-block layout at the SAME byte budget
 (``kv_dtype="int8"`` — ~3.6x the blocks at hd=32), reporting
 ``kv_capacity_x`` and the preemption-count drop.
 
-Emits ``BENCH_decode.json`` with, per mode: tokens/s, jitted dispatches per
-generated token, steady-state batch occupancy, mean response, and for the
-shared-prefix runs ``prefix_hit_rate`` / ``cow_copies`` / ``preemptions`` /
-``spilled_blocks``.  The paged path must win occupancy on the same trace and
-prefix sharing must win tokens/s on the shared trace — those are the
-response-time levers SplitPlace's MAB optimizes around.
+Finally a *mixed* trace (long-prompt batch jobs among short tight-SLA
+interactive requests — the prefill/decode interference regime) runs
+colocated-paged vs ``fleet="disagg"``: a prefill worker chunk-prefills into
+its own pool and ships finished KV blocks through the ``CacheStore`` to a
+decode worker.  The ``disagg_vs_colocated`` section reports decode-lane
+occupancy, p99 response, TTFT and wire bytes for both arms.
+
+Emits ``BENCH_decode.json``.  The paged path must win occupancy on the same
+trace and prefix sharing must win tokens/s on the shared trace — those are
+the response-time levers SplitPlace's MAB optimizes around.  The trace
+builders and best-of-N harness live in ``benchmarks/_common.py``.
 
     PYTHONPATH=src python benchmarks/decode_throughput.py [--tiny]
 """
@@ -35,167 +41,13 @@ import argparse
 import json
 import pathlib
 import sys
-import time
-
-import numpy as np
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
 
-
-def build_trace(n_reqs: int, seed: int = 0):
-    """(wave sizes, requests): bursty Poisson waves with mixed budgets."""
-    from repro.engine import Request
-    rng = np.random.default_rng(seed)
-    reqs = []
-    for i in range(n_reqs):
-        plen = int(rng.integers(3, 9))
-        # bimodal budgets: mostly short interactive, a tail of long jobs —
-        # the regime where gang scheduling stalls short requests
-        max_new = int(rng.choice([2, 3, 4, 12, 16], p=[.3, .25, .2, .15, .1]))
-        reqs.append(Request(
-            rid=i, app_id=int(rng.integers(0, 3)),
-            tokens=rng.integers(0, 128, plen).astype(np.int32),
-            sla_s=float(rng.uniform(0.5, 4.0)), max_new=max_new))
-    return _waves(n_reqs, rng), reqs
-
-
-def build_shared_trace(n_reqs: int, seed: int = 0, *, n_families: int = 3,
-                       head_len: int = 96, tail_max: int = 8,
-                       pressure: bool = False):
-    """Shared-prefix Poisson trace: every request's prompt is one of
-    ``n_families`` common heads plus a short random tail — the regime where
-    join-wave prefill dominates and the prefix cache pays (multi-tenant
-    system prompts / per-app preambles on one split arm).
-
-    ``pressure=True`` swaps the budget/SLA mix for an adversarial one: a
-    tight-deadline short-job minority arriving into a loose-deadline
-    LONG-job majority — long loose lanes hold blocks across many scan
-    boundaries while tights arrive, which is the regime where EDF wants
-    preemption under a small pool."""
-    from repro.engine import Request
-    rng = np.random.default_rng(seed)
-    heads = [rng.integers(0, 128, head_len).astype(np.int32)
-             for _ in range(n_families)]
-    reqs = []
-    for i in range(n_reqs):
-        head = heads[int(rng.integers(n_families))]
-        tail = rng.integers(0, 128, int(rng.integers(1, tail_max))) \
-            .astype(np.int32)
-        if pressure:
-            tight = rng.random() < 0.3
-            max_new = int(rng.choice([2, 3])) if tight \
-                else int(rng.choice([6, 16]))
-            sla = 0.3 if tight else 8.0
-        else:
-            max_new = int(rng.choice([2, 3, 4, 6], p=[.35, .3, .2, .15]))
-            sla = float(rng.uniform(0.5, 4.0))
-        reqs.append(Request(
-            rid=i, app_id=int(rng.integers(0, 3)),
-            tokens=np.concatenate([head, tail]),
-            sla_s=sla, max_new=max_new))
-    return _waves(n_reqs, rng, 1, 2), reqs
-
-
-def _waves(n_reqs, rng, base: int = 2, lam: int = 4):
-    waves = []
-    left = n_reqs
-    while left:
-        # steady-state pressure: arrival waves sized to keep a backlog, so
-        # the schedulers differ in how they burn lanes, not in idle time
-        w = min(left, base + int(rng.poisson(lam)))
-        waves.append(w)
-        left -= w
-    return waves
-
-
-def run_mode(mode: str, trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
-             scan_tokens: int, cache_len: int = 32, block_size: int = 8,
-             prefix_sharing: bool = False, num_blocks=None,
-             kv_dtype: str = "f32", reps: int = 3) -> dict:
-    from repro.engine import FixedPolicy, LAYER, PlacementEngine
-    from repro.engine.jax_backend import JaxBackend
-
-    backend = JaxBackend(cfg, mesh, cache_len=cache_len, max_batch=max_batch,
-                         decode="legacy" if mode == "gang" else "paged",
-                         block_size=block_size, scan_tokens=scan_tokens,
-                         prefix_sharing=prefix_sharing, num_blocks=num_blocks,
-                         kv_dtype=kv_dtype)
-    eng = PlacementEngine(FixedPolicy(LAYER, placement=None), backend)
-    # warmup: identical-profile passes (same seed -> same wave/prompt/scan
-    # buckets) so the timed region measures steady-state serving, not
-    # compilation.  With prefix sharing on, TWO passes: the first populates
-    # the cache, the second runs (and compiles) the hit-regime shapes the
-    # timed pass will reuse — the timed figure is the steady-state hit
-    # regime.
-    for _ in range(2 if prefix_sharing else 1):
-        warm_waves, warm_reqs = trace_fn(n_reqs, seed=0)
-        i = 0
-        for w in warm_waves:
-            eng.submit(warm_reqs[i:i + w])
-            i += w
-            eng.step()
-        eng.drain()
-    warm = eng.summary()
-
-    # timed phase: ``reps`` identical passes, best wall wins — the tiny
-    # traces finish in tens of milliseconds, where a single pass is
-    # scheduler-noise-dominated
-    walls = []
-    for _ in range(reps):
-        waves, reqs = trace_fn(n_reqs, seed=0)
-        t0 = time.perf_counter()
-        i = 0
-        for w in waves:
-            eng.submit(reqs[i:i + w])
-            i += w
-            eng.step()                  # interleave: arrivals land in-flight
-        eng.drain()
-        walls.append(time.perf_counter() - t0)
-    wall = min(walls)
-    m = eng.summary()
-    # response/SLA figures from the timed requests only — the warmup pass
-    # absorbs the compile stalls and must not contaminate them
-    lat = [r.latency_s for r in reqs]
-    viol = [r.latency_s > r.sla_s for r in reqs]
-
-    generated = sum(r.max_new for r in reqs)
-    if mode == "gang":
-        dispatches = (m["prefill_calls"] + m["decode_steps"])
-        warm_disp = warm["prefill_calls"] + warm["decode_steps"]
-    else:
-        dispatches = m["prefill_calls"] + m["decode_dispatches"]
-        warm_disp = warm["prefill_calls"] + warm["decode_dispatches"]
-    # count deltas span all reps passes — report per-pass figures
-    out = {
-        "completed": (m["completed"] - warm["completed"]) // reps,
-        "wall_s": round(wall, 4),
-        "tokens_per_s": round((generated) / wall, 2),
-        "dispatches_per_token": round(
-            (dispatches - warm_disp) / reps / generated, 4),
-        "batch_occupancy": m["batch_occupancy"],
-        "mean_response_s": round(float(np.mean(lat)), 4),
-        "sla_violation": round(float(np.mean(viol)), 4),
-    }
-    if mode != "gang":
-        out["join_waves"] = m["join_waves"]
-        out["decode_dispatches"] = round(
-            (m["decode_dispatches"] - warm["decode_dispatches"]) / reps, 1)
-        out["compile_decode_misses"] = m["compile_decode_misses"]
-        out["compile_prefill_misses"] = m["compile_prefill_misses"]
-        # timed-phase cache behaviour (warmup deltas)
-        hit = m["prefix_hit_tokens"] - warm["prefix_hit_tokens"]
-        query = m["prefix_query_tokens"] - warm["prefix_query_tokens"]
-        out["prefix_hit_rate"] = round(hit / max(query, 1), 4)
-        out["cow_copies"] = round(
-            (m["cow_copies"] - warm["cow_copies"]) / reps, 1)
-        out["preemptions"] = round(
-            (m["preemptions"] - warm["preemptions"]) / reps, 1)
-        out["spilled_blocks"] = round(
-            (m["spilled_blocks"] - warm["spilled_blocks"]) / reps, 1)
-        out["kv_capacity_x"] = m["kv_capacity_x"]
-        out["kv_block_bytes"] = m["kv_block_bytes"]
-    return out
+from _common import (build_mixed_trace, build_shared_trace,  # noqa: E402
+                     build_trace, run_mode)
 
 
 def main(argv=None):
@@ -317,6 +169,49 @@ def main(argv=None):
         print("WARNING: int8 pressure run dropped requests")
     if pi["preemptions"] > pr["preemptions"]:
         print("WARNING: int8 KV did not reduce preemptions at equal bytes")
+
+    # ---- mixed trace: disaggregated prefill/decode vs colocated -----------
+    # long-prompt batch jobs among short tight-SLA interactive requests; the
+    # disagg arm chunk-prefills on a dedicated worker and ships finished KV
+    # blocks to the decode worker through the CacheStore.  Both arms run the
+    # same pool/scan geometry so the only variable is where prefill happens.
+    mw, mreqs = build_mixed_trace(n_reqs, seed=0)
+    results["mixed_trace"] = {
+        "n_reqs": n_reqs, "waves": len(mw),
+        "generated_tokens": sum(r.max_new for r in mreqs),
+        "long_prompts": sum(1 for r in mreqs if len(r.tokens) >= 32)}
+    for name, fleet in (("paged_mixed", None), ("disagg_mixed", "disagg")):
+        results[name] = run_mode(
+            "paged", build_mixed_trace, n_reqs, cfg, mesh,
+            max_batch=args.max_batch, scan_tokens=args.scan_tokens,
+            cache_len=64, prefix_sharing=True, fleet=fleet)
+        print(f"{name}: {json.dumps(results[name])}")
+    co, di = results["paged_mixed"], results["disagg_mixed"]
+    # disagg batch_occupancy counts decode-worker lane-steps only (prefill
+    # workers never seat decode lanes), so the two figures compare directly
+    results["disagg_vs_colocated"] = {
+        "completed_colocated": co["completed"],
+        "completed_disagg": di["completed"],
+        "decode_occupancy_colocated": co["batch_occupancy"],
+        "decode_occupancy_disagg": di["batch_occupancy"],
+        "p99_response_colocated_s": co["p99_response_s"],
+        "p99_response_disagg_s": di["p99_response_s"],
+        "ttft_colocated_s": co.get("ttft_s"),
+        "ttft_disagg_s": di.get("ttft_s"),
+        "blocks_shipped": di["blocks_shipped"],
+        "transfer_bytes": di["transfer_bytes"],
+        "ship_skipped_blocks": di["ship_skipped_blocks"],
+        "ship_requeues": di["ship_requeues"],
+    }
+    print("disagg_vs_colocated:", json.dumps(results["disagg_vs_colocated"]))
+    if di["completed"] != n_reqs:
+        print("WARNING: disagg run dropped requests")
+    if di["blocks_shipped"] <= 0:
+        print("WARNING: disagg run shipped no blocks")
+    if di["batch_occupancy"] < co["batch_occupancy"]:
+        print("WARNING: disagg decode-lane occupancy below colocated")
+    if di["p99_response_s"] > 2 * co["p99_response_s"]:
+        print("WARNING: disagg p99 response more than 2x colocated")
 
     pathlib.Path(args.out).write_text(json.dumps(results, indent=2))
     print(f"wrote {args.out}")

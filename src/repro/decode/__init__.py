@@ -12,16 +12,27 @@ The serving layer between the placement engine and the model stack:
   * ``scheduler``    — ``PagedArmScheduler``: EDF in-flight joins with
     prefix-cache hits at scan boundaries, chunked tail prefill interleaved
     with decode, pressure-driven preemption (spill/resume), immediate
-    retirement, occupancy + recompile accounting.
+    retirement, occupancy + recompile accounting.  ``role=`` splits the
+    step loop for disaggregated fleets: ``"prefill"`` workers detach
+    finished lanes for shipping, ``"decode"`` workers seat shipped lanes.
+  * ``cache_store``  — the block-shipping pipe between a prefill and a
+    decode worker: ``CacheStore`` moves each wave's finished KV blocks in
+    one jitted transfer (``shard_map``+``ppermute`` across devices, fused
+    gather/scatter on one) and the ``RequestBlockBuffer`` ledger tracks
+    expected/arrived blocks with timeout -> requeue.
 
 ``repro.engine.JaxBackend`` drives one ``PagedArmScheduler`` per split arm
-behind the unchanged ``ExecutionBackend`` protocol.
+(or a prefill/decode pair + ``CacheStore`` with ``fleet="disagg"``) behind
+the unchanged ``ExecutionBackend`` protocol.
 """
+from repro.decode.cache_store import (CacheStore, RequestBlockBuffer,
+                                      Shipment)
 from repro.decode.paged_cache import (NULL_BLOCK, BlockAllocator, PrefixIndex,
                                       chunk_write_slots, copy_blocks,
-                                      int8_kv_capacity_ratio,
+                                      gather_blocks, int8_kv_capacity_ratio,
                                       pool_block_bytes, quantize_kv,
-                                      quantize_pool, write_slots)
+                                      quantize_pool, scatter_blocks,
+                                      write_slots)
 from repro.decode.paged_model import (make_decode_fn, make_prefill_chunk_fn,
                                       paged_decode_logits,
                                       quantize_attn_params,
@@ -29,9 +40,10 @@ from repro.decode.paged_model import (make_decode_fn, make_prefill_chunk_fn,
 from repro.decode.scheduler import Lane, PagedArmScheduler
 
 __all__ = [
-    "NULL_BLOCK", "BlockAllocator", "Lane", "PagedArmScheduler",
-    "PrefixIndex", "chunk_write_slots", "copy_blocks",
-    "int8_kv_capacity_ratio", "make_decode_fn", "make_prefill_chunk_fn",
-    "paged_decode_logits", "pool_block_bytes", "quantize_attn_params",
-    "quantize_kv", "quantize_pool", "supports_paged_decode", "write_slots",
+    "NULL_BLOCK", "BlockAllocator", "CacheStore", "Lane", "PagedArmScheduler",
+    "PrefixIndex", "RequestBlockBuffer", "Shipment", "chunk_write_slots",
+    "copy_blocks", "gather_blocks", "int8_kv_capacity_ratio",
+    "make_decode_fn", "make_prefill_chunk_fn", "paged_decode_logits",
+    "pool_block_bytes", "quantize_attn_params", "quantize_kv",
+    "quantize_pool", "scatter_blocks", "supports_paged_decode", "write_slots",
 ]

@@ -1,0 +1,399 @@
+"""Block-granular KV cache store: ship finished prefill blocks to decoders.
+
+The disaggregated serving mode splits one arm's fleet into a dedicated
+*prefill* worker and a dedicated *decode* worker (``role=`` on
+:class:`~repro.decode.scheduler.PagedArmScheduler`), so compute-heavy
+chunked-prefill waves never stall the latency-critical decode scan.  The
+piece that makes the split real is this module: a finished prompt's KV
+blocks live in the prefill worker's pool and must become **physically
+local** to the decode worker before its lane can join.
+
+Shipping is block-granular and wave-batched, modeled on rtp-llm's
+cache-store/RequestBlockBuffer design:
+
+  * :meth:`CacheStore.ship` drains the prefill scheduler's detached
+    ship-ready lanes, allocates destination blocks (receiver-side prefix
+    hits map onto already-local blocks and are **not** transferred), and
+    moves every outstanding block of the wave in ONE jitted transfer —
+    ``lax.ppermute`` over a 2-worker ``fleet`` mesh axis inside
+    ``shard_map`` when the pools live on distinct devices, a fused
+    gather/scatter otherwise.  Pow2 bucketing bounds compile keys exactly
+    like the scheduler's dispatch paths.
+  * :class:`RequestBlockBuffer` is the in-flight ledger: request id ->
+    expected / arrived destination-block sets plus a deadline.  A shipment
+    whose blocks never all arrive times out and the request **requeues**
+    for a fresh prefill (which then hits the prefill worker's prefix
+    cache, so a lost wave costs one cheap re-prefill, not correctness).
+  * :meth:`CacheStore.poll` seats completed arrivals into free decode
+    lanes via ``admit_shipped`` — the block-table rewrite: the lane's
+    logical table now names receiver-local physical blocks.
+
+Transfers are bit-exact by construction: block payloads are gathered and
+scattered verbatim, so an int8 pool ships its codes AND per-token-slot
+scales untouched — nothing is ever requantized in flight, preserving the
+quantize-on-write invariant that makes prefix hits replay exactly.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.decode.paged_cache import (NULL_BLOCK, _is_scale_path,
+                                      gather_blocks, scatter_blocks)
+from repro.decode.scheduler import Lane, PagedArmScheduler
+from repro.engine.types import next_pow2
+
+try:
+    from jax.experimental.shard_map import shard_map
+except ImportError:                                    # newer jax: jax.shard_map
+    from jax import shard_map                          # pragma: no cover
+
+
+@dataclass
+class Shipment:
+    """One request's in-flight block transfer (ledger entry)."""
+    lane: Lane
+    dst_blocks: List[int]        # full receiver-side logical block table
+    n_shared: int                # leading entries satisfied by a prefix hit
+    expected: Set[int]           # destination ids awaiting arrival
+    arrived: Set[int] = field(default_factory=set)
+    deadline: float = 0.0
+
+    @property
+    def complete(self) -> bool:
+        return self.expected <= self.arrived
+
+
+class RequestBlockBuffer:
+    """rid -> :class:`Shipment` ledger of in-flight block transfers.
+
+    Host-side bookkeeping only; the device never sees it.  ``mark`` records
+    arrivals (a block outside the expected set is a protocol error),
+    ``pop_ready`` drains complete shipments, ``pop_expired`` drains the
+    ones whose deadline passed with blocks still missing.
+    """
+
+    def __init__(self):
+        self._pending: Dict[int, Shipment] = {}
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def open(self, lane: Lane, dst_blocks: Sequence[int], n_shared: int,
+             expected: Set[int], deadline: float) -> Shipment:
+        rid = lane.req.rid
+        if rid in self._pending:
+            raise ValueError(f"shipment already open for request {rid}")
+        if NULL_BLOCK in expected:
+            raise ValueError("null block can never be a shipment target")
+        shp = Shipment(lane=lane, dst_blocks=list(dst_blocks),
+                       n_shared=n_shared, expected=set(expected),
+                       deadline=deadline)
+        self._pending[rid] = shp
+        return shp
+
+    def mark(self, rid: int, block_ids: Sequence[int]) -> None:
+        shp = self._pending.get(rid)
+        if shp is None:
+            return                       # already expired and requeued
+        extra = set(block_ids) - shp.expected
+        if extra:
+            raise ValueError(
+                f"request {rid}: arrival of unexpected blocks {sorted(extra)}")
+        shp.arrived.update(block_ids)
+
+    def pop_ready(self) -> List[Shipment]:
+        done = [rid for rid, s in self._pending.items() if s.complete]
+        return [self._pending.pop(rid) for rid in done]
+
+    def pop_expired(self, now: float) -> List[Shipment]:
+        late = [rid for rid, s in self._pending.items()
+                if not s.complete and now >= s.deadline]
+        return [self._pending.pop(rid) for rid in late]
+
+    def earliest_deadline(self) -> Optional[float]:
+        live = [s.lane.deadline for s in self._pending.values()]
+        return min(live) if live else None
+
+
+class CacheStore:
+    """Block shipping pipe between one prefill and one decode scheduler.
+
+    ``src`` must be a ``role="prefill"`` scheduler, ``dst`` a
+    ``role="decode"`` one with an identical pool layout.  When both carry a
+    pinned device and the devices differ, shipping runs device-to-device
+    through a 2-worker ``fleet`` mesh (``shard_map`` + ``ppermute``);
+    otherwise a fused local gather/scatter moves the bytes (the
+    single-device fleet used by fast in-process tests).
+
+    ``on_requeue(lane)`` fires when a shipment times out — the engine
+    pushes the (reset) request back onto the arm queue.
+    """
+
+    def __init__(self, src: PagedArmScheduler, dst: PagedArmScheduler, *,
+                 timeout_s: float = 30.0,
+                 on_requeue: Optional[Callable[[Lane], None]] = None):
+        if src.role != "prefill" or dst.role != "decode":
+            raise ValueError("CacheStore wants a prefill src and decode dst")
+        if src.block_size != dst.block_size:
+            raise ValueError("src/dst block sizes differ")
+        if src.kv_dtype != dst.kv_dtype:
+            raise ValueError("src/dst pool layouts differ")
+        self.src = src
+        self.dst = dst
+        self.timeout_s = timeout_s
+        self.on_requeue = on_requeue
+        self.ledger = RequestBlockBuffer()
+        self.fleet = (src.device is not None and dst.device is not None
+                      and src.device != dst.device)
+        if self.fleet and src.alloc.num_blocks != dst.alloc.num_blocks:
+            # the fleet transfer stacks both pools along the block axis
+            raise ValueError("fleet workers need equal-sized pools")
+        self._mesh: Optional[Mesh] = None
+        self._specs = None
+        self._waiting: List[Lane] = []     # deferred on receiver pressure
+        self._arrived: list = []           # (deadline, seq, lane) seat heap
+        self._seq = 0
+        self._jitted: Dict[tuple, object] = {}
+
+        # test fault-injection: rid -> True drops the wave's arrival marks
+        self.drop_filter: Optional[Callable[[int], bool]] = None
+        self.capture_hlo = False
+        self.fleet_hlo: Optional[str] = None
+
+        # instrumentation
+        self.blocks_shipped = 0
+        self.transfer_bytes = 0
+        self.ship_waves = 0
+        self.ship_skipped_blocks = 0       # receiver prefix hits, not moved
+        self.ship_deferred = 0
+        self.ship_requeues = 0
+        self.ship_dropped_waves = 0
+        self.compile_stats: Dict[str, int] = {}
+
+    # ------------------------------------------------------------- status
+    @property
+    def backlog(self) -> int:
+        return len(self.ledger) + len(self._waiting) + len(self._arrived)
+
+    def has_work(self) -> bool:
+        return self.backlog > 0
+
+    def earliest_deadline(self) -> Optional[float]:
+        live = [l.deadline for l in self._waiting]
+        live += [d for d, _, _ in self._arrived[:1]]
+        led = self.ledger.earliest_deadline()
+        if led is not None:
+            live.append(led)
+        return min(live) if live else None
+
+    # --------------------------------------------------------------- ship
+    def ship(self, lanes: Sequence[Lane], now: float) -> None:
+        """Open shipments for the wave's lanes and move every outstanding
+        block in one jitted transfer.
+
+        Per lane: match the committed history against the *receiver's*
+        prefix index — already-local blocks are shared, not shipped (a full
+        receiver-side hit skips the transfer entirely) — then allocate the
+        shipped + decode-growth blocks on the receiver.  A lane the
+        receiver pool cannot host yet is deferred to the next wave
+        (backpressure), never dropped.
+        """
+        lanes = self._waiting + list(lanes)
+        self._waiting = []
+        wave: List[tuple] = []
+        for lane in lanes:
+            c = lane.committed
+            hist = lane.history()[:c]
+            n_written = self.dst.alloc.blocks_for(c)
+            total = self.dst.alloc.blocks_for(
+                c + max(int(lane.req.max_new), 1) - 1)
+            shared: List[int] = []
+            if self.dst.prefix_sharing:
+                # match_full: no leave-one-token rule — the first generated
+                # token is already in lane.out, no tail prefill needed
+                shared = self.dst.index.match_full(hist)
+            if shared:
+                self.dst.alloc.share(shared)
+            ids = self.dst.alloc.alloc(total - len(shared))
+            if ids is None:
+                if shared:
+                    self.dst.alloc.free(shared)
+                self._waiting.append(lane)
+                self.ship_deferred += 1
+                continue
+            n_ship = n_written - len(shared)
+            src_ids = lane.blocks[len(shared):n_written]
+            dst_blocks = shared + ids
+            self.ledger.open(lane, dst_blocks, len(shared),
+                             set(ids[:n_ship]), now + self.timeout_s)
+            wave.append((lane, src_ids, ids[:n_ship]))
+            self.ship_skipped_blocks += len(shared)
+
+        flat_src = [b for _, s, _ in wave for b in s]
+        flat_dst = [b for _, _, d in wave for b in d]
+        if flat_src:
+            self._transfer(flat_src, flat_dst)
+            self.blocks_shipped += len(flat_src)
+            self.transfer_bytes += len(flat_src) * self.src.kv_block_bytes
+            self.ship_waves += 1
+        for lane, _, dst_ids in wave:
+            # source-side epilogue first: the prefill worker registers the
+            # prompt in ITS index and frees the refs whether or not the
+            # transfer is acknowledged — a lost wave re-prefills from cache
+            self.src.finish_shipped(lane)
+            if self.drop_filter is not None and self.drop_filter(lane.req.rid):
+                self.ship_dropped_waves += 1
+            else:
+                self.ledger.mark(lane.req.rid, dst_ids)
+
+    def poll(self, now: float) -> int:
+        """Expire overdue shipments (free receiver refs, requeue the
+        request) and seat completed arrivals into free decode lanes.
+        Returns the number of lanes seated."""
+        for shp in self.ledger.pop_expired(now):
+            # tail-first, mirroring _release: keeps shorter shared prefixes
+            # matchable if the LRU reclaims parked parents later
+            self.dst.alloc.free(shp.dst_blocks[::-1])
+            lane = shp.lane
+            lane.out = []
+            lane.blocks = []
+            lane.committed = 0
+            lane.first_tok_t = 0.0
+            self.ship_requeues += 1
+            if self.on_requeue is not None:
+                self.on_requeue(lane)
+        for shp in self.ledger.pop_ready():
+            lane = shp.lane
+            lane.blocks = list(shp.dst_blocks)    # block-table rewrite
+            lane.n_shared = shp.n_shared
+            heapq.heappush(self._arrived, (lane.deadline, self._seq, lane))
+            self._seq += 1
+        seated = 0
+        while self._arrived and self.dst.has_free_lane():
+            _, _, lane = heapq.heappop(self._arrived)
+            self.dst.admit_shipped(lane, now)
+            seated += 1
+        return seated
+
+    # ---------------------------------------------------------- transfer
+    def _get_jitted(self, kind: str, key: tuple, build, donate):
+        full = (kind,) + key
+        stat = f"{kind}_hits" if full in self._jitted else f"{kind}_misses"
+        self.compile_stats[stat] = self.compile_stats.get(stat, 0) + 1
+        if full not in self._jitted:
+            dn = donate if jax.default_backend() != "cpu" else ()
+            self._jitted[full] = jax.jit(build(), donate_argnums=dn)
+        return self._jitted[full]
+
+    def _transfer(self, src_ids: List[int], dst_ids: List[int]) -> None:
+        n_pad = next_pow2(len(src_ids))
+        s = np.full(n_pad, NULL_BLOCK, np.int32)
+        d = np.full(n_pad, NULL_BLOCK, np.int32)
+        s[:len(src_ids)] = src_ids
+        d[:len(dst_ids)] = dst_ids
+        if self.fleet:
+            self._fleet_transfer(s, d)
+        else:
+            fn = self._get_jitted("ship_local", (n_pad,), self._build_local,
+                                  donate=(1,))
+            self.dst.pool = fn(self.src.pool, self.dst.pool,
+                               jnp.asarray(s), jnp.asarray(d))
+
+    @staticmethod
+    def _build_local():
+        def ship(src_pool, dst_pool, sids, dids):
+            return scatter_blocks(dst_pool, gather_blocks(src_pool, sids),
+                                  dids)
+        return ship
+
+    # ------------------------------------------------------ fleet (2 dev)
+    def _block_axis(self, path, x) -> int:
+        return x.ndim - (3 if _is_scale_path(path) else 4)
+
+    def _fleet_init(self) -> None:
+        self._mesh = Mesh(np.array([self.src.device, self.dst.device]),
+                          ("fleet",))
+
+        def spec_of(path, x):
+            ax = self._block_axis(path, x)
+            return P(*((None,) * ax + ("fleet",)))
+
+        self._specs = jax.tree_util.tree_map_with_path(spec_of, self.dst.pool)
+
+    def _stack_leaf(self, path, a, b):
+        """Assemble one fleet-global pool leaf from the two workers' local
+        leaves — zero-copy: the device buffers are adopted, not moved."""
+        ax = self._block_axis(path, a)
+        spec = P(*((None,) * ax + ("fleet",)))
+        shape = a.shape[:ax] + (2 * a.shape[ax],) + a.shape[ax + 1:]
+        return jax.make_array_from_single_device_arrays(
+            shape, NamedSharding(self._mesh, spec), [a, b])
+
+    def _build_fleet(self):
+        mesh, specs = self._mesh, self._specs
+
+        def body(pool, sids, dids):
+            # row w of sids/dids = worker w's local gather / scatter ids,
+            # NULL padded: the non-participating side gathers null-block
+            # garbage nobody receives and scatters the inbound payload into
+            # its own null scratch block — one symmetric SPMD program
+            w = jax.lax.axis_index("fleet")
+            s = jax.lax.dynamic_index_in_dim(sids, w, 0, keepdims=False)
+            d = jax.lax.dynamic_index_in_dim(dids, w, 0, keepdims=False)
+            payload = gather_blocks(pool, s)
+            payload = jax.tree_util.tree_map(
+                lambda x: jax.lax.ppermute(x, "fleet", ((0, 1),)), payload)
+            return scatter_blocks(pool, payload, d)
+
+        def ship(stacked, sids, dids):
+            return shard_map(body, mesh=mesh, in_specs=(specs, P(), P()),
+                             out_specs=specs)(stacked, sids, dids)
+
+        return ship
+
+    def _fleet_transfer(self, s: np.ndarray, d: np.ndarray) -> None:
+        if self._mesh is None:
+            self._fleet_init()
+        n_pad = len(s)
+        sids = jnp.asarray(np.stack([s, np.full_like(s, NULL_BLOCK)]))
+        dids = jnp.asarray(np.stack([np.full_like(d, NULL_BLOCK), d]))
+        stacked = jax.tree_util.tree_map_with_path(
+            self._stack_leaf, self.src.pool, self.dst.pool)
+        fn = self._get_jitted("ship_fleet", (n_pad,), self._build_fleet,
+                              donate=(0,))
+        if self.capture_hlo and self.fleet_hlo is None:
+            self.fleet_hlo = fn.lower(stacked, sids, dids).as_text()
+        out = fn(stacked, sids, dids)
+
+        def shard_for(dev):
+            def pick(x):
+                for sh in x.addressable_shards:
+                    if sh.device == dev:
+                        return sh.data
+                raise RuntimeError(f"no shard on {dev}")
+            return pick
+
+        # zero-copy disassembly: each worker's pool is its output shard
+        self.src.pool = jax.tree_util.tree_map(shard_for(self.src.device), out)
+        self.dst.pool = jax.tree_util.tree_map(shard_for(self.dst.device), out)
+
+    # ------------------------------------------------------------ metrics
+    def stats(self) -> dict:
+        return {
+            "blocks_shipped": self.blocks_shipped,
+            "transfer_bytes": self.transfer_bytes,
+            "ship_waves": self.ship_waves,
+            "ship_skipped_blocks": self.ship_skipped_blocks,
+            "ship_deferred": self.ship_deferred,
+            "ship_requeues": self.ship_requeues,
+            "ship_dropped_waves": self.ship_dropped_waves,
+            "ship_in_flight": len(self.ledger),
+            **{f"compile_{k}": v for k, v in self.compile_stats.items()},
+        }

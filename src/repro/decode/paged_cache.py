@@ -183,6 +183,32 @@ class PrefixIndex:
     def __len__(self) -> int:
         return sum(len(c) for c in self._children.values())
 
+    def match_full(self, tokens) -> List[int]:
+        """Longest cached full-block chain covering a *committed* history.
+
+        Unlike :meth:`match` this may cover **every** complete block — there
+        is no leave-one-token rule, because the caller (the cache-store ship
+        path) already holds the first generated token and needs no tail
+        prefill.  A trailing partial block (``len(tokens) % block_size``
+        tokens) is never matchable and stays the caller's to ship; when the
+        history is an exact block multiple, the receiver's next write lands
+        in a *fresh* block, so covering the whole history is write-safe.
+        """
+        bs = self.block_size
+        toks = [int(t) for t in tokens]
+        full: List[int] = []
+        parent = None
+        pos = 0
+        while pos + bs <= len(toks):
+            chunk = tuple(toks[pos:pos + bs])
+            child = self._children.get(parent, {}).get(chunk)
+            if child is None:
+                break
+            full.append(child)
+            parent = (parent, chunk)
+            pos += bs
+        return full
+
     def match(self, tokens) -> Tuple[List[int], Optional[Tuple[int, int]]]:
         """Longest cached head of ``tokens``.
 
@@ -337,6 +363,34 @@ def copy_blocks(pool, src: jax.Array, dst: jax.Array):
         return x.at[..., dst, :, :, :].set(x[..., src, :, :, :])
 
     return jax.tree_util.tree_map_with_path(leaf, pool)
+
+
+def gather_blocks(pool, ids: jax.Array):
+    """Extract the payload of physical blocks ``ids`` ([n] int32) from every
+    pool leaf — the wire format of a cache-store shipment.  Returns a pytree
+    with the pool's structure whose leaves have the physical axis replaced
+    by ``n``.  Layout-agnostic like :func:`copy_blocks`: int8 code leaves
+    and their per-token-slot ``_scale`` leaves are extracted verbatim, so a
+    shipped quantized block is never requantized in flight."""
+    def leaf(path, x):
+        if _is_scale_path(path):
+            return x[..., ids, :, :]
+        return x[..., ids, :, :, :]
+
+    return jax.tree_util.tree_map_with_path(leaf, pool)
+
+
+def scatter_blocks(pool, payload, ids: jax.Array):
+    """Write a :func:`gather_blocks` payload into physical blocks ``ids`` of
+    ``pool`` — the receiver half of a block shipment.  Padded entries point
+    at the null scratch block (whose contents are garbage by design), so one
+    unconditional scatter serves any pow2-bucketed wave width."""
+    def leaf(path, x, p):
+        if _is_scale_path(path):
+            return x.at[..., ids, :, :].set(p)
+        return x.at[..., ids, :, :, :].set(p)
+
+    return jax.tree_util.tree_map_with_path(leaf, pool, payload)
 
 
 def write_slots(lengths: jax.Array, block_tables: jax.Array,

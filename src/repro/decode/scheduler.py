@@ -58,6 +58,8 @@ class Lane:
     out: List[int] = field(default_factory=list)
     n_shared: int = 0            # leading block-table entries from the index
     preemptions: int = 0
+    committed: int = 0           # cache slots filled when detached for ship
+    first_tok_t: float = 0.0     # wall-clock of the first generated token
 
     @property
     def deadline(self) -> float:
@@ -80,10 +82,14 @@ class PagedArmScheduler:
                  scan_tokens: int = 8, util_floor: float = 0.5,
                  prefill_chunk: int = 32, prefix_sharing: bool = True,
                  watermark: float = 0.0, interpret: bool = False,
-                 kv_dtype: str = "f32", weight_quant: Optional[str] = None):
+                 kv_dtype: str = "f32", weight_quant: Optional[str] = None,
+                 role: str = "colocated", device=None, clock=None):
         if not supports_paged_decode(model):
             raise ValueError("model does not support paged decode "
                              "(needs pure global-attention mixers)")
+        if role not in ("colocated", "prefill", "decode"):
+            raise ValueError(f"role must be 'colocated', 'prefill' or "
+                             f"'decode', got {role!r}")
         if kv_dtype not in ("f32", "int8"):
             raise ValueError(f"kv_dtype must be 'f32' or 'int8', "
                              f"got {kv_dtype!r}")
@@ -91,6 +97,9 @@ class PagedArmScheduler:
             raise ValueError(f"weight_quant must be None, 'int8' or 'int4', "
                              f"got {weight_quant!r}")
         self.model = model
+        self.role = role
+        self.device = device
+        self.clock = clock
         self.kv_dtype = kv_dtype
         self.weight_quant = weight_quant
         self.quant_telemetry: Dict[str, float] = {}
@@ -124,6 +133,11 @@ class PagedArmScheduler:
             # scatter/attend paths key on the "k_scale" leaves
             self.pool = quantize_pool(self.pool)
         self.kv_block_bytes = pool_block_bytes(self.pool)
+        if device is not None:
+            # a fleet worker: pin params and pool to its device so every
+            # jitted prefill/decode call runs (and keeps its outputs) there
+            self.params = jax.device_put(self.params, device)
+            self.pool = jax.device_put(self.pool, device)
 
         self.block_tables = np.full((n_lanes, self.max_blocks), NULL_BLOCK,
                                     np.int32)
@@ -134,6 +148,7 @@ class PagedArmScheduler:
         self.lanes: List[Optional[Lane]] = [None] * n_lanes
         self._resume: list = []       # (deadline, seq, lane) heap of spills
         self._rseq = 0
+        self._ready: List[Lane] = []  # prefill role: detached, ship-ready
 
         self._jitted: Dict[tuple, object] = {}
 
@@ -158,7 +173,12 @@ class PagedArmScheduler:
         return self.max_blocks * self.block_size
 
     def validate(self, req) -> None:
-        need = len(req.tokens) + max(int(req.max_new), 1) - 1
+        # a prefill-only worker holds the prompt (and ships it before the
+        # first decode write); the decode side needs the full final length
+        if self.role == "prefill":
+            need = len(req.tokens)
+        else:
+            need = len(req.tokens) + max(int(req.max_new), 1) - 1
         if need > self.max_tokens_per_seq():
             raise ValueError(
                 f"request {req.rid}: {need} cache slots exceed the per-lane "
@@ -175,11 +195,15 @@ class PagedArmScheduler:
 
     @property
     def backlog(self) -> int:
-        """Seated lanes + spilled lanes awaiting resume."""
-        return self.n_active + len(self._resume)
+        """Seated lanes + spilled lanes awaiting resume + ship-ready."""
+        return self.n_active + len(self._resume) + len(self._ready)
+
+    def has_free_lane(self) -> bool:
+        return any(l is None for l in self.lanes)
 
     def earliest_deadline(self) -> Optional[float]:
         live = [l.deadline for l in self.lanes if l is not None]
+        live += [l.deadline for l in self._ready]
         if self._resume:
             live.append(self._resume[0][0])
         return min(live) if live else None
@@ -276,6 +300,9 @@ class PagedArmScheduler:
         allocates private blocks for the rest — spilling later-deadline
         lanes under pressure.  No model dispatch happens here; the seated
         lanes prefill chunk-by-chunk via ``prefill_step``."""
+        if self.role == "decode":
+            raise RuntimeError("decode-role scheduler seats lanes via "
+                               "admit_shipped, not try_join")
         free = [i for i, l in enumerate(self.lanes) if l is None]
         seat = iter(free)
         cow_pairs: List[tuple] = []
@@ -301,8 +328,13 @@ class PagedArmScheduler:
                 lane = Lane(req=req, enq=enq, join_t=now, blocks=[])
             req = lane.req
             seq_toks = lane.history()
-            total_need = self.alloc.blocks_for(
-                len(req.tokens) + max(int(req.max_new), 1) - 1)
+            if self.role == "prefill":
+                # prompt slots only: the first decode write happens on the
+                # receiver, after the blocks ship
+                total_need = self.alloc.blocks_for(len(seq_toks))
+            else:
+                total_need = self.alloc.blocks_for(
+                    len(req.tokens) + max(int(req.max_new), 1) - 1)
             shared: List[int] = []
             cow = None
             if self.prefix_sharing:
@@ -423,6 +455,7 @@ class PagedArmScheduler:
         self.prefill_chunks += 1
 
         retired: List[Lane] = []
+        t_first = self.clock() if self.clock is not None else now
         for row, li in enumerate(pf):
             lane = self.lanes[li]
             k = min(int(self.prefill_left[li]), c)
@@ -431,14 +464,73 @@ class PagedArmScheduler:
             if self.prefill_left[li] > 0:
                 continue
             lane.out.append(int(first[row]))
+            lane.first_tok_t = t_first
             budget = int(lane.req.max_new) - len(lane.out)
             if budget <= 0:
                 self._release(li, register=True)
                 retired.append(lane)
+            elif self.role == "prefill":
+                # detach for shipping: the lane keeps its block references,
+                # the seat frees for the next prefill wave.  The cache store
+                # ships the blocks and calls ``finish_shipped``.
+                lane.committed = int(self.lengths[li])
+                self._detach(li)
+                self._ready.append(lane)
             else:
                 self.remaining[li] = budget
                 self.last_tok[li] = first[row]
         return retired
+
+    # ----------------------------------------------------- ship / receive
+    def _detach(self, li: int) -> None:
+        """Clear seat ``li`` WITHOUT dropping the lane's block references —
+        the detached lane still owns its blocks (contrast ``_release``)."""
+        self.lanes[li] = None
+        self.block_tables[li] = NULL_BLOCK
+        self.lengths[li] = 0
+        self.prefill_left[li] = 0
+        self.remaining[li] = 0
+
+    def take_ready(self) -> List[Lane]:
+        """Drain the ship-ready lanes a prefill worker has detached."""
+        out, self._ready = self._ready, []
+        return out
+
+    def finish_shipped(self, lane: Lane) -> None:
+        """Source-side epilogue of a shipment: register the lane's full
+        blocks in this worker's prefix index (later same-head prompts skip
+        their re-prefill), then drop the block references."""
+        if self.prefix_sharing and lane.committed >= self.block_size:
+            self.index.insert(lane.history()[:lane.committed], lane.blocks,
+                              self.alloc)
+        if lane.blocks:
+            self.alloc.free(lane.blocks[::-1])
+        lane.blocks = []
+        lane.n_shared = 0
+
+    def admit_shipped(self, lane: Lane, now: float) -> None:
+        """Seat an arrived shipment in a free decode lane.  ``lane.blocks``
+        already names physically-local blocks (the cache store rewrote the
+        table on receive), so decoding resumes from the first generated
+        token at position ``committed`` exactly as the colocated path
+        would: first decode write lands at slot ``committed``."""
+        if self.role != "decode":
+            raise RuntimeError("admit_shipped on a non-decode scheduler")
+        li = next(i for i, l in enumerate(self.lanes) if l is None)
+        if self.prefix_sharing and lane.committed >= self.block_size:
+            # shipped blocks become cached prefix HERE: the next same-head
+            # request hits the receiver's index and skips the transfer
+            self.index.insert(lane.history()[:lane.committed], lane.blocks,
+                              self.alloc)
+        self.lanes[li] = lane
+        row = np.full(self.max_blocks, NULL_BLOCK, np.int32)
+        row[:len(lane.blocks)] = lane.blocks
+        self.block_tables[li] = row
+        self.lengths[li] = lane.committed
+        self.prefill_left[li] = 0
+        self.remaining[li] = int(lane.req.max_new) - len(lane.out)
+        self.last_tok[li] = lane.out[-1]
+        self.joined += 1
 
     # ------------------------------------------------------------ dispatch
     def dispatch(self, now: float) -> List[Lane]:

@@ -108,7 +108,8 @@ class PlacementEngine:
         # policy/benchmark code can read them off EngineStats directly
         for f in ("prefix_hit_rate", "cow_copies", "preemptions",
                   "spilled_blocks", "kv_capacity_x", "kv_block_bytes",
-                  "weight_quant_max_err"):
+                  "weight_quant_max_err", "blocks_shipped", "transfer_bytes",
+                  "ttft_s"):
             if f in extra:
                 setattr(self.stats, f, extra[f])
         sched = self.decide_time_s + extra.pop("place_time_s", 0.0)

@@ -51,9 +51,15 @@ class JaxBackend:
                  num_blocks: Optional[int] = None,
                  prefill_chunk: int = 32, prefix_sharing: bool = True,
                  watermark: float = 0.0, kv_dtype: str = "f32",
-                 weight_quant: Optional[str] = None):
+                 weight_quant: Optional[str] = None,
+                 fleet: Optional[str] = None, fleet_devices=None,
+                 ship_timeout_s: float = 30.0):
         if decode not in ("auto", "paged", "legacy"):
             raise ValueError(f"decode={decode!r}; expected auto|paged|legacy")
+        if fleet not in (None, "disagg"):
+            raise ValueError(f"fleet={fleet!r}; expected None|'disagg'")
+        if fleet is not None and decode == "legacy":
+            raise ValueError("fleet='disagg' needs the paged decode path")
         if kv_dtype not in ("f32", "int8"):
             raise ValueError(f"kv_dtype={kv_dtype!r}; expected f32|int8")
         if weight_quant not in (None, "int8", "int4"):
@@ -72,12 +78,19 @@ class JaxBackend:
         self.watermark = watermark
         self.kv_dtype = kv_dtype
         self.weight_quant = weight_quant
+        self.fleet = fleet
+        self.ship_timeout_s = ship_timeout_s
+        # fleet device pool, consumed (prefill_dev, decode_dev) per arm in
+        # _ensure_arm order; an exhausted pool colocates on one device
+        self._fleet_pool = list(fleet_devices) if fleet_devices else []
         self._init_key = jax.random.PRNGKey(seed + 1)
         self.runners: Dict[int, object] = {}
         self.params: Dict[int, object] = {}
         self._prefill_fns: Dict[int, object] = {}
         self._decode_fns: Dict[int, object] = {}
         self._paged: Dict[int, object] = {}   # arm -> PagedArmScheduler
+        self._disagg: Dict[int, tuple] = {}   # arm -> (pf, dc, CacheStore)
+        self._ttfts: List[float] = []
         # (abs_deadline, seq, enqueue_t, request) heaps per arm
         self._queues: Dict[int, list] = {}
         self._seq = 0
@@ -108,6 +121,10 @@ class JaxBackend:
             raise ValueError(
                 f"decode='paged' but arm {arm} (mode {ARM_MODES[arm]}) has "
                 "recurrent mixers; use decode='auto' for a legacy fallback")
+        if self.fleet is not None and not r.supports_batched_prefill:
+            raise ValueError(
+                f"fleet='disagg' but arm {arm} (mode {ARM_MODES[arm]}) has "
+                "recurrent mixers — block shipping needs the paged path")
         self.runners[arm] = r
         self.params[arm] = r.init(self._init_key)
         self._prefill_fns[arm] = jax.jit(
@@ -117,34 +134,70 @@ class JaxBackend:
         self._queues[arm] = []
         if self.decode != "legacy" and r.supports_batched_prefill:
             from repro.decode import PagedArmScheduler
-            self._paged[arm] = PagedArmScheduler(
-                r.model, self.params[arm], n_lanes=self.max_batch,
-                cache_len=self.cache_len, block_size=self.block_size,
-                num_blocks=self.num_blocks, scan_tokens=self.scan_tokens,
-                prefill_chunk=self.prefill_chunk,
-                prefix_sharing=self.prefix_sharing,
-                watermark=self.watermark, kv_dtype=self.kv_dtype,
-                weight_quant=self.weight_quant)
+            kw = dict(n_lanes=self.max_batch, cache_len=self.cache_len,
+                      block_size=self.block_size, num_blocks=self.num_blocks,
+                      scan_tokens=self.scan_tokens,
+                      prefill_chunk=self.prefill_chunk,
+                      prefix_sharing=self.prefix_sharing,
+                      watermark=self.watermark, kv_dtype=self.kv_dtype,
+                      weight_quant=self.weight_quant,
+                      clock=lambda: self.now)
+            if self.fleet == "disagg":
+                from repro.decode.cache_store import CacheStore
+                pf_dev = dc_dev = None
+                if len(self._fleet_pool) >= 2:
+                    pf_dev = self._fleet_pool.pop(0)
+                    dc_dev = self._fleet_pool.pop(0)
+                pf = PagedArmScheduler(r.model, self.params[arm],
+                                       role="prefill", device=pf_dev, **kw)
+                dc = PagedArmScheduler(r.model, self.params[arm],
+                                       role="decode", device=dc_dev, **kw)
+                store = CacheStore(
+                    pf, dc, timeout_s=self.ship_timeout_s,
+                    on_requeue=lambda lane, a=arm: self._requeue(a, lane))
+                self._disagg[arm] = (pf, dc, store)
+            else:
+                self._paged[arm] = PagedArmScheduler(
+                    r.model, self.params[arm], **kw)
 
     # ------------------------------------------------------------- lifecycle
     @property
     def now(self) -> float:
         return time.perf_counter() - self._t0
 
+    def _all_scheds(self):
+        for s in self._paged.values():
+            yield s
+        for pf, dc, _ in self._disagg.values():
+            yield pf
+            yield dc
+
     def pending(self) -> int:
         queued = sum(len(q) for q in self._queues.values())
-        in_flight = sum(s.backlog for s in self._paged.values())
+        in_flight = sum(s.backlog for s in self._all_scheds())
+        in_flight += sum(st.backlog for _, _, st in self._disagg.values())
         return queued + in_flight
 
     def submit(self, req: Request) -> None:
         self._ensure_arm(req.decision)
         if req.decision in self._paged:
             self._paged[req.decision].validate(req)
+        elif req.decision in self._disagg:
+            pf, dc, _ = self._disagg[req.decision]
+            pf.validate(req)      # prompt must fit the prefill worker ...
+            dc.validate(req)      # ... and prompt+decode the decode worker
         enq = self.now
         deadline = (req.arrival_s if req.arrival_s is not None else enq) \
             + req.sla_s
         heapq.heappush(self._queues[req.decision],
                        (deadline, self._seq, enq, req))
+        self._seq += 1
+
+    def _requeue(self, arm: int, lane) -> None:
+        """A timed-out shipment's request goes back onto the arm queue for a
+        fresh prefill (which then hits the prefill worker's prefix cache)."""
+        heapq.heappush(self._queues[arm],
+                       (lane.deadline, self._seq, lane.enq, lane.req))
         self._seq += 1
 
     # --------------------------------------------------------------- serving
@@ -158,6 +211,12 @@ class JaxBackend:
             d = sched.earliest_deadline()
             if d is not None:
                 cand.append(d)
+        if arm in self._disagg:
+            pf, dc, store = self._disagg[arm]
+            for d in (pf.earliest_deadline(), dc.earliest_deadline(),
+                      store.earliest_deadline()):
+                if d is not None:
+                    cand.append(d)
         return min(cand) if cand else None
 
     def _pick_arm(self) -> Optional[int]:
@@ -180,7 +239,17 @@ class JaxBackend:
         """Batched prefill dispatches: legacy gang prefills + paged prefill
         chunk calls (each commits one chunk for the whole prefilling wave)."""
         return self._legacy_prefills + sum(s.prefill_chunks
-                                           for s in self._paged.values())
+                                           for s in self._all_scheds())
+
+    def _lane_outcome(self, lane, arm: int, finish: float) -> Outcome:
+        """Stamp a retired lane's Outcome, including time-to-first-token
+        (admission -> the prefill chunk that produced ``out[0]``)."""
+        req = lane.req
+        if lane.first_tok_t:
+            req.ttft_s = lane.first_tok_t - lane.enq
+            self._ttfts.append(req.ttft_s)
+        out = np.asarray(lane.out[:req.max_new], np.int32)
+        return self._outcome(req, arm, lane.enq, lane.join_t, out, finish)
 
     # ----------------------------------------------------- paged decode path
     def _step_paged(self, arm: int) -> List[Outcome]:
@@ -195,17 +264,37 @@ class JaxBackend:
         sched.try_join(self._queues[arm], self.now)
         done = sched.prefill_step(self.now)
         prefill_finish = self.now
-        outcomes = [
-            self._outcome(lane.req, arm, lane.enq, lane.join_t,
-                          np.asarray(lane.out[:lane.req.max_new], np.int32),
-                          prefill_finish)
-            for lane in done]
+        outcomes = [self._lane_outcome(lane, arm, prefill_finish)
+                    for lane in done]
         retired = sched.dispatch(self.now)
         finish = self.now
-        for lane in retired:
-            out = np.asarray(lane.out[:lane.req.max_new], np.int32)
-            outcomes.append(self._outcome(lane.req, arm, lane.enq,
-                                          lane.join_t, out, finish))
+        outcomes += [self._lane_outcome(lane, arm, finish)
+                     for lane in retired]
+        return outcomes
+
+    # ------------------------------------------------- disaggregated fleet
+    def _step_disagg(self, arm: int) -> List[Outcome]:
+        """One step of the arm's prefill->decode fleet: the prefill worker
+        seats queued requests and commits one chunk wave; its ship-ready
+        lanes (first token in hand) go through the cache store — receiver
+        block allocation, one jitted device-to-device block transfer,
+        ledger bookkeeping — and completed arrivals seat into free decode
+        lanes before the fused decode dispatch runs.  A shipment whose
+        blocks never arrive times out in ``poll`` and requeues."""
+        pf, dc, store = self._disagg[arm]
+        pf.try_join(self._queues[arm], self.now)
+        done = pf.prefill_step(self.now)
+        prefill_finish = self.now
+        # max_new == 1 retires at the prefill worker: its one token came
+        # from the chunk logits, nothing needs shipping
+        outcomes = [self._lane_outcome(lane, arm, prefill_finish)
+                    for lane in done]
+        store.ship(pf.take_ready(), self.now)
+        store.poll(self.now)
+        retired = dc.dispatch(self.now)
+        finish = self.now
+        outcomes += [self._lane_outcome(lane, arm, finish)
+                     for lane in retired]
         return outcomes
 
     # ---------------------------------------------------- legacy gang path
@@ -280,6 +369,8 @@ class JaxBackend:
         arm = self._pick_arm()
         if arm is None:
             return []
+        if arm in self._disagg:
+            return self._step_disagg(arm)
         if arm in self._paged:
             return self._step_paged(arm)
         return self._step_legacy(arm)
@@ -298,14 +389,15 @@ class JaxBackend:
             m["prefill_buckets"] = {
                 f"arm{a}:b{b}xs{s}": n
                 for (a, b, s), n in sorted(self._legacy_buckets.items())}
-        if self._paged:
+        scheds = list(self._all_scheds())
+        if scheds:
             # per-pool ratios/errors are properties of each arm's layout, not
             # flow counters: report the max across arms instead of a sum
             ratio_keys = ("kv_block_bytes", "kv_block_bytes_f32",
                           "kv_capacity_x", "weight_quant_bits",
                           "weight_quant_max_err", "weight_quant_mean_err")
             agg: Dict[str, float] = {}
-            for sched in self._paged.values():
+            for sched in scheds:
                 for k, v in sched.stats().items():
                     if k in ("batch_occupancy", "mean_active_lanes",
                              "prefix_hit_rate"):
@@ -314,8 +406,11 @@ class JaxBackend:
                         agg[k] = max(agg.get(k, v), v)
                         continue
                     agg[k] = agg.get(k, 0) + v
-            tokens = sum(s.decoded_tokens for s in self._paged.values())
-            steps = sum(s.lane_steps for s in self._paged.values())
+            tokens = sum(s.decoded_tokens for s in scheds)
+            steps = sum(s.lane_steps for s in scheds)
+            # for a disagg fleet only the decode workers dispatch scans, so
+            # this IS decode-lane occupancy (prefill lanes contribute zero
+            # lane-steps by construction)
             agg["batch_occupancy"] = round(tokens / max(steps, 1), 4)
             # token-weighted across arms: cached prompt tokens / prompt
             # tokens that joins would otherwise have had to prefill
@@ -326,4 +421,9 @@ class JaxBackend:
         elif self._legacy_lane_steps:
             m["batch_occupancy"] = round(
                 self._legacy_useful / self._legacy_lane_steps, 4)
+        for _, _, store in self._disagg.values():
+            for k, v in store.stats().items():
+                m[k] = m.get(k, 0) + v
+        if self._ttfts:
+            m["ttft_s"] = round(float(np.mean(self._ttfts)), 6)
         return m

@@ -68,6 +68,7 @@ class Request:
     ctx: Optional[object] = None          # policy decision context
     queue_wait_s: float = 0.0
     latency_s: float = 0.0
+    ttft_s: float = 0.0                   # admission -> first generated token
     accuracy: float = 0.0
     output: Optional[np.ndarray] = None   # generated tokens (JaxBackend)
 
@@ -141,6 +142,12 @@ class EngineStats:
     kv_capacity_x: float = 1.0
     kv_block_bytes: int = 0
     weight_quant_max_err: float = 0.0
+    # disaggregated-serving telemetry (JaxBackend fleet="disagg"): blocks
+    # moved prefill->decode through the cache store, their wire bytes, and
+    # the mean admission->first-token latency across completed requests
+    blocks_shipped: int = 0
+    transfer_bytes: int = 0
+    ttft_s: float = 0.0
 
     def record(self, o: Outcome) -> None:
         self.completed += 1

@@ -1,0 +1,376 @@
+"""Disaggregated prefill/decode serving: cache-store block shipping.
+
+Covers the `repro.decode.cache_store` subsystem end to end: the
+RequestBlockBuffer ledger protocol, allocator-conservation across the
+ship/receive ownership handoff (hypothesis property over two
+BlockAllocators), timeout -> requeue recovery, single-device
+disagg-vs-colocated token parity (the in-process fast check), and the
+4-fake-device subprocess suite that runs the REAL device-to-device
+``shard_map``/``ppermute`` transfer for both arms and both pool layouts.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.decode import (NULL_BLOCK, BlockAllocator, CacheStore,
+                          PagedArmScheduler, PrefixIndex, RequestBlockBuffer)
+from repro.engine import (LAYER, FixedPolicy, PlacementEngine, Request)
+from repro.engine.jax_backend import JaxBackend
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+# ------------------------------------------------------------- prefix index
+def test_match_full_covers_exact_multiple():
+    """match_full has no leave-one-token rule: a committed history that is
+    an exact block multiple matches ALL its blocks (the zero-transfer case),
+    while match() must keep leaving the last token uncovered."""
+    bs = 4
+    idx = PrefixIndex(bs)
+    alloc = BlockAllocator(10, bs)
+    hist = np.arange(8, dtype=np.int32)            # 8 % 4 == 0
+    blocks = alloc.alloc(2)
+    idx.insert(hist, blocks, alloc)
+    assert idx.match_full(hist) == blocks          # full coverage
+    assert idx.match(hist)[0] == blocks[:1]        # >=1 token stays uncovered
+    # a trailing partial block is never matchable by match_full
+    assert idx.match_full(np.arange(7)) == blocks[:1]
+    assert idx.match_full(np.arange(100, 108)) == []
+
+
+# -------------------------------------------------------------- the ledger
+class _StubLane:
+    def __init__(self, rid, deadline=0.0):
+        self.req = type("R", (), {"rid": rid})()
+        self.deadline = deadline
+
+
+def test_ledger_protocol():
+    buf = RequestBlockBuffer()
+    lane = _StubLane(7)
+    shp = buf.open(lane, [3, 4, 5], 1, {4, 5}, deadline=10.0)
+    assert len(buf) == 1 and not shp.complete
+    with pytest.raises(ValueError, match="already open"):
+        buf.open(_StubLane(7), [6], 0, {6}, deadline=10.0)
+    with pytest.raises(ValueError, match="null block"):
+        buf.open(_StubLane(8), [NULL_BLOCK], 0, {NULL_BLOCK}, deadline=10.0)
+    with pytest.raises(ValueError, match="unexpected blocks"):
+        buf.mark(7, [9])
+    buf.mark(7, [4])
+    assert buf.pop_ready() == [] and buf.pop_expired(5.0) == []
+    buf.mark(7, [5])
+    assert [s.lane for s in buf.pop_ready()] == [lane]
+    assert len(buf) == 0
+    # arrival for an already-popped (expired/ready) rid is a silent no-op
+    buf.mark(7, [4])
+    # incomplete shipments expire at their deadline, complete ones never do
+    buf.open(_StubLane(9), [2], 0, {2}, deadline=1.0)
+    assert buf.pop_expired(0.5) == []
+    assert [s.lane.req.rid for s in buf.pop_expired(1.0)] == [9]
+
+
+# ---------------------------------------------- ownership handoff property
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), src_blocks=st.integers(4, 24),
+       dst_blocks=st.integers(4, 24))
+def test_ship_receive_conserves_blocks(seed, src_blocks, dst_blocks):
+    """Random prefill/ship/arrive/expire/retire interleavings across two
+    allocators: total live+free+evictable is conserved on BOTH pools at
+    every step, the null block is never shipped, a timed-out shipment's
+    receiver blocks all return, and nothing leaks or double-frees once the
+    system drains (BlockAllocator raises on any double-free)."""
+    rng = np.random.default_rng(seed)
+    src = BlockAllocator(src_blocks, block_size=4)
+    dst = BlockAllocator(dst_blocks, block_size=4)
+    buf = RequestBlockBuffer()
+    src_lanes = []                    # prefill-held block lists
+    seated = []                       # decode-held block lists
+    rid = 0
+    now = 0.0
+    for _ in range(120):
+        now += 1.0
+        op = rng.random()
+        if op < 0.3:                                   # prefill a new lane
+            ids = src.alloc(int(rng.integers(1, 4)))
+            if ids is not None:
+                src_lanes.append(ids)
+        elif op < 0.55 and src_lanes:                  # ship one lane
+            blocks = src_lanes.pop(int(rng.integers(len(src_lanes))))
+            dids = dst.alloc(len(blocks))
+            if dids is None:
+                src_lanes.append(blocks)               # backpressure: defer
+            else:
+                assert NULL_BLOCK not in blocks
+                buf.open(_StubLane(rid), dids, 0, set(dids),
+                         deadline=now + 5.0)
+                # source epilogue: prefill refs drop once the wave is sent
+                src.free(blocks)
+                if rng.random() < 0.8:                 # wave delivered
+                    buf.mark(rid, dids)
+                rid += 1
+        elif op < 0.75:                                # poll
+            for shp in buf.pop_expired(now):
+                dst.free(shp.dst_blocks[::-1])
+            for shp in buf.pop_ready():
+                seated.append(shp.dst_blocks)
+        elif seated:                                   # retire a decode lane
+            dst.free(seated.pop(int(rng.integers(len(seated)))))
+        for a, total in ((src, src_blocks - 1), (dst, dst_blocks - 1)):
+            assert (a.free_blocks + a.evictable_blocks
+                    + a.used_blocks == total)
+    # drain: every outstanding reference must unwind exactly once
+    for shp in buf.pop_expired(now + 100.0):
+        dst.free(shp.dst_blocks[::-1])
+    for shp in buf.pop_ready():
+        seated.append(shp.dst_blocks)
+    for blocks in src_lanes:
+        src.free(blocks)
+    for blocks in seated:
+        dst.free(blocks)
+    assert src.used_blocks == 0 and dst.used_blocks == 0
+    assert src.available_blocks == src_blocks - 1
+    assert dst.available_blocks == dst_blocks - 1
+
+
+# -------------------------------------------------------------- role guards
+def test_role_guards(tiny_cfg, tiny_mesh):
+    from repro.dist import api as A
+    import jax
+    r = A.build_runner(tiny_cfg, "pipeline", tiny_mesh)
+    params = r.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="role"):
+        PagedArmScheduler(r.model, params, n_lanes=2, cache_len=16,
+                          role="router")
+    dc = PagedArmScheduler(r.model, params, n_lanes=2, cache_len=16,
+                           block_size=4, role="decode")
+    with pytest.raises(RuntimeError, match="admit_shipped"):
+        dc.try_join([], 0.0)
+    pf = PagedArmScheduler(r.model, params, n_lanes=2, cache_len=16,
+                           block_size=4, role="prefill")
+    with pytest.raises(RuntimeError, match="non-decode"):
+        pf.admit_shipped(None, 0.0)
+    with pytest.raises(ValueError, match="prefill src"):
+        CacheStore(dc, pf)
+    # a prefill worker only needs the PROMPT to fit its pool
+    long_gen = Request(rid=0, app_id=0,
+                       tokens=np.arange(8, dtype=np.int32), sla_s=1.0,
+                       max_new=50)
+    pf.validate(long_gen)                      # prompt fits: fine
+    with pytest.raises(ValueError, match="paged capacity"):
+        dc.validate(long_gen)                  # prompt + decode does not
+
+
+# ------------------------------------------------- single-device parity
+def _mk_reqs(vocab, n, plen, max_new, seed=5):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, app_id=int(rng.integers(0, 3)),
+                    tokens=rng.integers(0, vocab, plen).astype(np.int32),
+                    sla_s=float(rng.uniform(0.5, 4.0)), max_new=max_new)
+            for i in range(n)]
+
+
+def _run_fleet(tiny_cfg, tiny_mesh, *, fleet, n=5, plen=6, max_new=6,
+               **kw):
+    backend = JaxBackend(tiny_cfg, tiny_mesh, cache_len=16, max_batch=4,
+                         block_size=4, scan_tokens=4, arms=(LAYER,),
+                         fleet=fleet, **kw)
+    eng = PlacementEngine(FixedPolicy(LAYER, placement=None), backend)
+    reqs = _mk_reqs(tiny_cfg.vocab_size, n, plen, max_new)
+    eng.submit(reqs)
+    eng.drain()
+    return eng, reqs
+
+
+def test_disagg_matches_colocated_single_device(tiny_cfg, tiny_mesh):
+    """On one device the fleet transfer degrades to a fused gather/scatter
+    between the two pools — tokens must still match the colocated scheduler
+    bit-exactly, and the ship telemetry must flow through EngineStats."""
+    eng_c, reqs_c = _run_fleet(tiny_cfg, tiny_mesh, fleet=None)
+    eng_d, reqs_d = _run_fleet(tiny_cfg, tiny_mesh, fleet="disagg")
+    for a, b in zip(reqs_c, reqs_d):
+        np.testing.assert_array_equal(a.output, b.output)
+    m = eng_d.summary()
+    assert m["completed"] == len(reqs_d)
+    assert m["blocks_shipped"] > 0
+    assert m["transfer_bytes"] == m["blocks_shipped"] * m["kv_block_bytes"]
+    assert m["ttft_s"] > 0
+    # every request carries its own admission -> first-token latency, and
+    # no request's TTFT can exceed its full response time
+    assert all(0 < r.ttft_s <= r.latency_s + 1e-9 for r in reqs_d)
+    # EngineStats mirror (the schema benchmarks/policies read)
+    assert eng_d.stats.blocks_shipped == m["blocks_shipped"]
+    assert eng_d.stats.transfer_bytes == m["transfer_bytes"]
+    assert eng_d.stats.ttft_s == m["ttft_s"]
+    # colocated path reports no shipping
+    mc = eng_c.summary()
+    assert "blocks_shipped" not in mc and mc["completed"] == len(reqs_c)
+    # both pools fully unwound
+    pf, dc, store = eng_d.backend._disagg[LAYER]
+    assert pf.alloc.used_blocks == 0 and dc.alloc.used_blocks == 0
+    assert store.backlog == 0
+
+
+def test_receiver_prefix_hit_skips_transfer(tiny_cfg, tiny_mesh):
+    """A second identical prompt whose length is an exact block multiple
+    finds ALL its blocks in the receiver's index: zero blocks ship, and the
+    tokens still match."""
+    backend = JaxBackend(tiny_cfg, tiny_mesh, cache_len=16, max_batch=4,
+                         block_size=4, scan_tokens=4, arms=(LAYER,),
+                         fleet="disagg")
+    eng = PlacementEngine(FixedPolicy(LAYER, placement=None), backend)
+    store = backend._disagg[LAYER][2]
+    prompt = np.random.default_rng(3).integers(
+        0, tiny_cfg.vocab_size, 8).astype(np.int32)        # 8 % 4 == 0
+    r1 = Request(rid=0, app_id=0, tokens=prompt, sla_s=5.0, max_new=5)
+    eng.submit([r1])
+    eng.drain()
+    shipped_cold = store.blocks_shipped
+    assert shipped_cold >= 2
+    r2 = Request(rid=1, app_id=0, tokens=prompt.copy(), sla_s=5.0, max_new=5)
+    eng.submit([r2])
+    eng.drain()
+    assert store.blocks_shipped == shipped_cold      # nothing moved
+    assert store.ship_skipped_blocks >= 2
+    np.testing.assert_array_equal(r1.output, r2.output)
+
+
+def test_ship_timeout_requeues_and_reserves(tiny_cfg, tiny_mesh):
+    """A lost wave (drop_filter suppresses the arrival marks) expires in the
+    ledger, frees every receiver block, and requeues the request — which
+    re-prefills through the prefill worker's prefix cache and completes
+    with the exact tokens an undisturbed run produces."""
+    outs = {}
+    for drop in (False, True):
+        backend = JaxBackend(tiny_cfg, tiny_mesh, cache_len=16, max_batch=4,
+                             block_size=4, scan_tokens=4, arms=(LAYER,),
+                             fleet="disagg", ship_timeout_s=0.0)
+        eng = PlacementEngine(FixedPolicy(LAYER, placement=None), backend)
+        store = backend._disagg[LAYER][2]
+        if drop:
+            lost = set()
+            store.drop_filter = \
+                lambda rid: rid not in lost and not lost.add(rid)
+        reqs = _mk_reqs(tiny_cfg.vocab_size, 3, plen=6, max_new=5, seed=7)
+        eng.submit(reqs)
+        eng.drain()
+        m = eng.summary()
+        assert m["completed"] == 3
+        if drop:
+            assert m["ship_requeues"] >= 3
+            assert m["ship_dropped_waves"] >= 3
+            # the re-prefill hits the prefill worker's own index
+            assert m["prefix_hit_rate"] > 0
+        else:
+            assert m["ship_requeues"] == 0
+        pf, dc, _ = backend._disagg[LAYER]
+        assert pf.alloc.used_blocks == 0 and dc.alloc.used_blocks == 0
+        outs[drop] = [r.output for r in reqs]
+    for a, b in zip(outs[False], outs[True]):
+        np.testing.assert_array_equal(a, b)
+
+
+# -------------------------------------------- 4-fake-device fleet parity
+_DISAGG_CODE = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
+import numpy as np, jax
+from repro.configs.base import get_config
+from repro.engine import LAYER, SEMANTIC, FixedPolicy, PlacementEngine, Request
+from repro.engine.jax_backend import JaxBackend
+
+cfg = get_config('stablelm-1.6b').reduced().replace(
+    d_model=64, n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+    vocab_size=128)
+mesh = jax.make_mesh((1, 1), ('data', 'model'))
+devs = jax.devices()
+assert len(devs) >= 4, devs
+
+def reqs(n, plen, max_new, seed=5):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, app_id=int(rng.integers(0, 3)),
+                    tokens=rng.integers(0, 128, plen).astype(np.int32),
+                    sla_s=float(rng.uniform(0.5, 4.0)), max_new=max_new)
+            for i in range(n)]
+
+for arm, kv in ((LAYER, 'f32'), (LAYER, 'int8'),
+                (SEMANTIC, 'f32'), (SEMANTIC, 'int8')):
+    outs = {}
+    for fleet, fd in ((None, None), ('disagg', devs[:2])):
+        backend = JaxBackend(cfg, mesh, cache_len=16, max_batch=4,
+                             block_size=4, scan_tokens=4, kv_dtype=kv,
+                             fleet=fleet, fleet_devices=fd, arms=(arm,))
+        eng = PlacementEngine(FixedPolicy(arm, placement=None), backend)
+        rs = reqs(4, plen=6, max_new=6)
+        if fleet:
+            store = backend._disagg[arm][2]
+            store.capture_hlo = True
+        eng.submit(rs)
+        eng.drain()
+        outs[fleet] = [r.output for r in rs]
+        if fleet:
+            m = eng.summary()
+            assert m['completed'] == 4, m
+            assert m['blocks_shipped'] > 0, m
+            assert m['transfer_bytes'] > 0, m
+            assert m['ttft_s'] > 0, m
+            # the prefill pool lives on dev0, the decode pool on dev1
+            assert store.fleet
+            pf, dc, _ = backend._disagg[arm]
+            for leaf in jax.tree_util.tree_leaves(pf.pool):
+                assert leaf.devices() == {devs[0]}
+            for leaf in jax.tree_util.tree_leaves(dc.pool):
+                assert leaf.devices() == {devs[1]}
+            hlo = store.fleet_hlo
+            assert ('collective-permute' in hlo
+                    or 'collective_permute' in hlo), 'ship has no ppermute'
+    # bit-exact parity: prefill-on-A -> ship -> decode-on-B == colocated
+    for a, b in zip(outs[None], outs['disagg']):
+        np.testing.assert_array_equal(a, b)
+    print('ARM', arm, kv, 'OK')
+
+# receiver prefix hit across the device boundary: zero blocks ship
+backend = JaxBackend(cfg, mesh, cache_len=16, max_batch=4, block_size=4,
+                     scan_tokens=4, fleet='disagg', fleet_devices=devs[:2],
+                     arms=(LAYER,))
+eng = PlacementEngine(FixedPolicy(LAYER, placement=None), backend)
+store = backend._disagg[LAYER][2]
+prompt = np.random.default_rng(3).integers(0, 128, 8).astype(np.int32)
+r1 = Request(rid=0, app_id=0, tokens=prompt, sla_s=5.0, max_new=5)
+eng.submit([r1]); eng.drain()
+cold = store.blocks_shipped
+r2 = Request(rid=1, app_id=0, tokens=prompt.copy(), sla_s=5.0, max_new=5)
+eng.submit([r2]); eng.drain()
+assert store.blocks_shipped == cold, (cold, store.blocks_shipped)
+assert store.ship_skipped_blocks >= 2
+np.testing.assert_array_equal(r1.output, r2.output)
+print('PREFIX SKIP OK')
+print('DISAGG PARITY OK')
+"""
+
+
+def _run_sub(code):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    # force CPU: the fake-device flag rides on the CPU platform, and letting
+    # jax probe for accelerators can hang for minutes on TPU-libraried hosts
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900, env=env)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
+    return r.stdout
+
+
+def test_disagg_parity_4dev():
+    """Acceptance: on 4 fake CPU devices, prefill-on-worker-A -> ship ->
+    decode-on-worker-B produces identical tokens to the colocated path for
+    both arms and both pool layouts (f32 + int8 codes/scales verbatim),
+    including a receiver-side prefix hit that skips the transfer; the ship
+    program lowers to an explicit collective-permute.  NOT marked slow —
+    CI's fast gate fails if this skips."""
+    out = _run_sub(_DISAGG_CODE)
+    assert "DISAGG PARITY OK" in out
