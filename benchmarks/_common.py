@@ -107,13 +107,19 @@ def build_mixed_trace(n_reqs: int, seed: int = 0):
 def run_mode(mode: str, trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
              scan_tokens: int, cache_len: int = 32, block_size: int = 8,
              prefix_sharing: bool = False, num_blocks=None,
-             kv_dtype: str = "f32", fleet=None, reps: int = 3) -> dict:
+             kv_dtype: str = "f32", fleet=None, reps: int = 3,
+             trace_path=None) -> dict:
     """Drive one serving configuration through warmup + ``reps`` identical
     timed passes (best wall wins) and report per-pass warmup-delta
     counters.  ``fleet="disagg"`` runs the prefill/decode worker pair with
-    cache-store block shipping instead of one colocated scheduler."""
+    cache-store block shipping instead of one colocated scheduler.
+
+    ``trace_path`` installs a ``repro.obs`` Tracer over the TIMED passes
+    only (warmup compile stalls stay out of the trace) and exports a
+    Chrome/Perfetto trace-event JSON there on the way out."""
     from repro.engine import FixedPolicy, LAYER, PlacementEngine
     from repro.engine.jax_backend import JaxBackend
+    from repro.obs import Tracer, set_tracer
 
     backend = JaxBackend(cfg, mesh, cache_len=cache_len, max_batch=max_batch,
                          decode="legacy" if mode == "gang" else "paged",
@@ -141,16 +147,25 @@ def run_mode(mode: str, trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
     # traces finish in tens of milliseconds, where a single pass is
     # scheduler-noise-dominated
     walls = []
-    for _ in range(reps):
-        waves, reqs = trace_fn(n_reqs, seed=0)
-        t0 = time.perf_counter()
-        i = 0
-        for w in waves:
-            eng.submit(reqs[i:i + w])
-            i += w
-            eng.step()                  # interleave: arrivals land in-flight
-        eng.drain()
-        walls.append(time.perf_counter() - t0)
+    tracer = old_tracer = None
+    if trace_path is not None:
+        tracer = Tracer()
+        old_tracer = set_tracer(tracer)
+    try:
+        for _ in range(reps):
+            waves, reqs = trace_fn(n_reqs, seed=0)
+            t0 = time.perf_counter()
+            i = 0
+            for w in waves:
+                eng.submit(reqs[i:i + w])
+                i += w
+                eng.step()              # interleave: arrivals land in-flight
+            eng.drain()
+            walls.append(time.perf_counter() - t0)
+    finally:
+        if tracer is not None:
+            set_tracer(old_tracer)
+            tracer.export_chrome_trace(trace_path)
     wall = min(walls)
     m = eng.summary()
     # response/SLA figures from the timed requests only — the warmup pass
@@ -178,9 +193,15 @@ def run_mode(mode: str, trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
         "p99_response_s": round(float(np.percentile(lat, 99)), 4),
         "sla_violation": round(float(np.mean(viol)), 4),
     }
+    # timed-pass percentile fields (exact, over the final pass's requests);
+    # p99_response_s / p99_ttft_s stay for older consumers
+    for q in (50, 95, 99):
+        out[f"response_p{q}"] = round(float(np.percentile(lat, q)), 4)
     if ttfts:
         out["ttft_s"] = round(float(np.mean(ttfts)), 4)
         out["p99_ttft_s"] = round(float(np.percentile(ttfts, 99)), 4)
+        for q in (50, 95, 99):
+            out[f"ttft_p{q}"] = round(float(np.percentile(ttfts, q)), 4)
     if mode != "gang":
         out["join_waves"] = m["join_waves"]
         out["decode_dispatches"] = round(
@@ -204,4 +225,8 @@ def run_mode(mode: str, trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
         for k in ("blocks_shipped", "transfer_bytes", "ship_waves",
                   "ship_skipped_blocks", "ship_deferred", "ship_requeues"):
             out[k] = round((m[k] - warm[k]) / reps, 1)
+        for k in ("ship_latency_p50", "ship_latency_p95",
+                  "ship_latency_p99"):
+            if k in m:
+                out[k] = m[k]
     return out

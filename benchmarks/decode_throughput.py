@@ -59,10 +59,22 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--scan-tokens", type=int, default=8)
     ap.add_argument("--out", default=str(REPO / "BENCH_decode.json"))
+    ap.add_argument("--trace-out", default=None,
+                    help="rerun the mixed disagg config with repro.obs "
+                         "tracing and write the Chrome trace JSON here")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler device trace (jitted "
+                         "dispatches labelled via TraceAnnotation) into "
+                         "this directory")
     args = ap.parse_args(argv)
 
     import jax
     from repro.configs.base import get_config
+    from repro.obs import set_annotations
+
+    if args.profile_dir:
+        set_annotations(True)
+        jax.profiler.start_trace(args.profile_dir)
 
     cfg = get_config(args.arch).reduced()
     if args.tiny:
@@ -212,6 +224,34 @@ def main(argv=None):
         print("WARNING: disagg decode-lane occupancy below colocated")
     if di["p99_response_s"] > 2 * co["p99_response_s"]:
         print("WARNING: disagg p99 response more than 2x colocated")
+
+    # ---- traced rerun: same disagg config with lifecycle tracing on -------
+    # the trace must come ~free: every traced region is per dispatch, so
+    # traced tokens/s staying within a few % of untraced is the overhead
+    # acceptance gate for the obs subsystem
+    if args.trace_out:
+        results["disagg_traced"] = run_mode(
+            "paged", build_mixed_trace, n_reqs, cfg, mesh,
+            max_batch=args.max_batch, scan_tokens=args.scan_tokens,
+            cache_len=64, prefix_sharing=True, fleet="disagg",
+            trace_path=args.trace_out)
+        dt = results["disagg_traced"]
+        print(f"disagg_traced: {json.dumps(dt)}")
+        ratio = round(dt["tokens_per_s"] / max(di["tokens_per_s"], 1e-9), 4)
+        results["trace_overhead"] = {
+            "tokens_per_s_untraced": di["tokens_per_s"],
+            "tokens_per_s_traced": dt["tokens_per_s"],
+            "ratio": ratio,
+        }
+        print("trace_overhead:", json.dumps(results["trace_overhead"]))
+        print(f"wrote {args.trace_out}")
+        if ratio < 0.95:
+            print("WARNING: tracing cost more than 5% of tokens/s")
+
+    if args.profile_dir:
+        jax.profiler.stop_trace()
+        set_annotations(False)
+        print(f"wrote device profile to {args.profile_dir}")
 
     pathlib.Path(args.out).write_text(json.dumps(results, indent=2))
     print(f"wrote {args.out}")

@@ -48,6 +48,7 @@ from repro.decode.paged_cache import (NULL_BLOCK, _is_scale_path,
                                       gather_blocks, scatter_blocks)
 from repro.decode.scheduler import Lane, PagedArmScheduler
 from repro.engine.types import next_pow2
+from repro.obs import Histogram, annotation, get_tracer
 
 try:
     from jax.experimental.shard_map import shard_map
@@ -64,6 +65,7 @@ class Shipment:
     expected: Set[int]           # destination ids awaiting arrival
     arrived: Set[int] = field(default_factory=set)
     deadline: float = 0.0
+    opened: float = 0.0          # ship-wave clock stamp (latency origin)
 
     @property
     def complete(self) -> bool:
@@ -86,7 +88,8 @@ class RequestBlockBuffer:
         return len(self._pending)
 
     def open(self, lane: Lane, dst_blocks: Sequence[int], n_shared: int,
-             expected: Set[int], deadline: float) -> Shipment:
+             expected: Set[int], deadline: float,
+             opened: float = 0.0) -> Shipment:
         rid = lane.req.rid
         if rid in self._pending:
             raise ValueError(f"shipment already open for request {rid}")
@@ -94,7 +97,7 @@ class RequestBlockBuffer:
             raise ValueError("null block can never be a shipment target")
         shp = Shipment(lane=lane, dst_blocks=list(dst_blocks),
                        n_shared=n_shared, expected=set(expected),
-                       deadline=deadline)
+                       deadline=deadline, opened=opened)
         self._pending[rid] = shp
         return shp
 
@@ -176,6 +179,9 @@ class CacheStore:
         self.ship_requeues = 0
         self.ship_dropped_waves = 0
         self.compile_stats: Dict[str, int] = {}
+        # open-shipment -> seated-arrival latency (merged up by the backend)
+        self.ship_latency = Histogram()
+        self.track = ("store", "ship")     # backend relabels per arm
 
     # ------------------------------------------------------------- status
     @property
@@ -207,6 +213,13 @@ class CacheStore:
         """
         lanes = self._waiting + list(lanes)
         self._waiting = []
+        if not lanes:
+            return
+        tr = get_tracer()
+        with tr.span("ship_wave", track=self.track, lanes=len(lanes)) as sp:
+            self._ship_wave(lanes, now, tr, sp)
+
+    def _ship_wave(self, lanes: List[Lane], now: float, tr, sp) -> None:
         wave: List[tuple] = []
         for lane in lanes:
             c = lane.committed
@@ -232,14 +245,19 @@ class CacheStore:
             src_ids = lane.blocks[len(shared):n_written]
             dst_blocks = shared + ids
             self.ledger.open(lane, dst_blocks, len(shared),
-                             set(ids[:n_ship]), now + self.timeout_s)
+                             set(ids[:n_ship]), now + self.timeout_s,
+                             opened=now)
             wave.append((lane, src_ids, ids[:n_ship]))
             self.ship_skipped_blocks += len(shared)
+            tr.instant("ship", track=self.track, req=lane.req.rid,
+                       blocks=n_ship, shared=len(shared))
 
         flat_src = [b for _, s, _ in wave for b in s]
         flat_dst = [b for _, _, d in wave for b in d]
+        sp.set(shipped=len(wave), blocks=len(flat_src))
         if flat_src:
-            self._transfer(flat_src, flat_dst)
+            with annotation(f"ship:{next_pow2(len(flat_src))}"):
+                self._transfer(flat_src, flat_dst)
             self.blocks_shipped += len(flat_src)
             self.transfer_bytes += len(flat_src) * self.src.kv_block_bytes
             self.ship_waves += 1
@@ -257,11 +275,14 @@ class CacheStore:
         """Expire overdue shipments (free receiver refs, requeue the
         request) and seat completed arrivals into free decode lanes.
         Returns the number of lanes seated."""
+        tr = get_tracer()
         for shp in self.ledger.pop_expired(now):
             # tail-first, mirroring _release: keeps shorter shared prefixes
             # matchable if the LRU reclaims parked parents later
             self.dst.alloc.free(shp.dst_blocks[::-1])
             lane = shp.lane
+            tr.instant("ship_timeout", track=self.track, req=lane.req.rid,
+                       missing=len(shp.expected - shp.arrived))
             lane.out = []
             lane.blocks = []
             lane.committed = 0
@@ -271,6 +292,7 @@ class CacheStore:
                 self.on_requeue(lane)
         for shp in self.ledger.pop_ready():
             lane = shp.lane
+            self.ship_latency.observe(max(now - shp.opened, 0.0))
             lane.blocks = list(shp.dst_blocks)    # block-table rewrite
             lane.n_shared = shp.n_shared
             heapq.heappush(self._arrived, (lane.deadline, self._seq, lane))

@@ -46,6 +46,7 @@ from repro.decode.paged_model import (make_decode_fn, make_prefill_chunk_fn,
                                       quantize_attn_params,
                                       supports_paged_decode)
 from repro.engine.types import next_pow2
+from repro.obs import annotation, get_tracer
 
 
 @dataclass
@@ -77,6 +78,25 @@ class Lane:
 class PagedArmScheduler:
     """Paged continuous-batching state for one split arm's model/params."""
 
+    #: metric kinds for ``stats()`` keys (``repro.obs.metrics``): everything
+    #: undeclared is a flow counter and SUMS across schedulers; gauges are
+    #: per-pool layout properties that MAX; ratios recompute from the merged
+    #: counters so cross-arm aggregates stay token-weighted.  This replaces
+    #: the old suffix-keyed "max-not-sum" list in JaxBackend.extra_metrics.
+    STAT_KINDS = {
+        "batch_occupancy": ("ratio", "decoded_tokens", "lane_steps"),
+        "mean_active_lanes": ("ratio", "active_lane_frac_sum",
+                              "decode_dispatches"),
+        "prefix_hit_rate": ("ratio", "prefix_hit_tokens",
+                            "prefix_query_tokens"),
+        "kv_block_bytes": "gauge",
+        "kv_block_bytes_f32": "gauge",
+        "kv_capacity_x": "gauge",
+        "weight_quant_bits": "gauge",
+        "weight_quant_max_err": "gauge",
+        "weight_quant_mean_err": "gauge",
+    }
+
     def __init__(self, model, params, *, n_lanes: int, cache_len: int,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  scan_tokens: int = 8, util_floor: float = 0.5,
@@ -100,6 +120,10 @@ class PagedArmScheduler:
         self.role = role
         self.device = device
         self.clock = clock
+        # trace track: (process, thread) labels for this scheduler's span
+        # row in the Chrome trace; JaxBackend overwrites with arm labels
+        dev = device if device is not None else jax.devices()[0]
+        self.track = ("paged", f"{role}@{dev}")
         self.kv_dtype = kv_dtype
         self.weight_quant = weight_quant
         self.quant_telemetry: Dict[str, float] = {}
@@ -231,13 +255,15 @@ class PagedArmScheduler:
         full = (kind,) + key
         stat = f"{kind}_hits" if full in self._jitted else f"{kind}_misses"
         self.compile_stats[stat] = self.compile_stats.get(stat, 0) + 1
+        name = f"{kind}:{'x'.join(map(str, key))}"
         if full not in self._jitted:
             # the pool is fully rewritten every call: donate it so the
             # device never holds two copies.  CPU has no donation support
             # and would warn per call.
             dn = donate if jax.default_backend() != "cpu" else ()
             self._jitted[full] = jax.jit(build(), donate_argnums=dn)
-        name = f"{kind}:{'x'.join(map(str, key))}"
+            get_tracer().instant("compile_miss", track=self.track,
+                                 bucket=name)
         self.buckets[name] = self.buckets.get(name, 0) + 1
         return self._jitted[full]
 
@@ -277,6 +303,8 @@ class PagedArmScheduler:
         lane.preemptions += 1
         self.preemptions += 1
         self.spilled_blocks += released
+        get_tracer().instant("preempt", track=self.track, req=lane.req.rid,
+                             spilled=released)
         heapq.heappush(self._resume, (lane.deadline, self._rseq, lane))
         self._rseq += 1
 
@@ -303,7 +331,18 @@ class PagedArmScheduler:
         if self.role == "decode":
             raise RuntimeError("decode-role scheduler seats lanes via "
                                "admit_shipped, not try_join")
+        if not (queue or self._resume):
+            return
         free = [i for i, l in enumerate(self.lanes) if l is None]
+        # the span records the wave even when an admission's validate()
+        # raises mid-loop (the context manager exits on the exception path)
+        with get_tracer().span("join_wave", track=self.track,
+                               free=len(free)) as sp:
+            admitted = self._join_wave(queue, now, free)
+            sp.set(admitted=admitted)
+
+    def _join_wave(self, queue: list, now: float, free: List[int]) -> int:
+        tr = get_tracer()
         seat = iter(free)
         cow_pairs: List[tuple] = []
         admitted = 0
@@ -389,12 +428,15 @@ class PagedArmScheduler:
             self.remaining[li] = 0
             self.prefix_hit_tokens += covered
             self.prefix_query_tokens += len(seq_toks)
+            tr.instant("seat", req=req.rid, cached=covered,
+                       resumed=use_resume)
             admitted += 1
 
         self._flush_cow(cow_pairs)
         if admitted:
             self.join_waves += 1
             self.joined += admitted
+        return admitted
 
     def _flush_cow(self, cow_pairs: List[tuple]) -> None:
         """Run the wave's pending copy-on-write block copies (one jitted,
@@ -408,7 +450,10 @@ class PagedArmScheduler:
             src[i], dst[i] = s, d
         fn = self._get_jitted("cow", (n_pad,),
                               lambda: copy_blocks, donate=(0,))
-        self.pool = fn(self.pool, jnp.asarray(src), jnp.asarray(dst))
+        with get_tracer().span("cow_copy", track=self.track,
+                               pairs=len(cow_pairs)), \
+                annotation(f"cow:{n_pad}"):
+            self.pool = fn(self.pool, jnp.asarray(src), jnp.asarray(dst))
         self.cow_copies += len(cow_pairs)
         # copies done — the pinned sources can go back to the cache
         self.alloc.free([s for s, _ in cow_pairs])
@@ -448,10 +493,13 @@ class PagedArmScheduler:
             "prefill", (w, c),
             lambda: make_prefill_chunk_fn(self.model,
                                           interpret=self.interpret))
-        logits, self.pool = fn(self.params, self.pool, jnp.asarray(toks),
-                               jnp.asarray(starts), jnp.asarray(n_tok),
-                               jnp.asarray(bt))
-        first = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+        tr = get_tracer()
+        with tr.span("prefill_chunk", track=self.track, wave=len(pf),
+                     chunk=c), annotation(f"prefill:{w}x{c}"):
+            logits, self.pool = fn(self.params, self.pool, jnp.asarray(toks),
+                                   jnp.asarray(starts), jnp.asarray(n_tok),
+                                   jnp.asarray(bt))
+            first = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
         self.prefill_chunks += 1
 
         retired: List[Lane] = []
@@ -465,10 +513,12 @@ class PagedArmScheduler:
                 continue
             lane.out.append(int(first[row]))
             lane.first_tok_t = t_first
+            tr.instant("first_token", track=self.track, req=lane.req.rid)
             budget = int(lane.req.max_new) - len(lane.out)
             if budget <= 0:
                 self._release(li, register=True)
                 retired.append(lane)
+                tr.instant("retire", track=self.track, req=lane.req.rid)
             elif self.role == "prefill":
                 # detach for shipping: the lane keeps its block references,
                 # the seat frees for the next prefill wave.  The cache store
@@ -531,6 +581,8 @@ class PagedArmScheduler:
         self.remaining[li] = int(lane.req.max_new) - len(lane.out)
         self.last_tok[li] = lane.out[-1]
         self.joined += 1
+        get_tracer().instant("admit_shipped", track=self.track,
+                             req=lane.req.rid, blocks=len(lane.blocks))
 
     # ------------------------------------------------------------ dispatch
     def dispatch(self, now: float) -> List[Lane]:
@@ -564,10 +616,14 @@ class PagedArmScheduler:
         tok[:n_act] = self.last_tok[act]
         old_remaining = remaining.copy()
 
-        self.pool, tok_o, lengths_o, remaining_o, toks = fn(
-            self.params, self.pool, jnp.asarray(tok[:, None]),
-            jnp.asarray(bt), jnp.asarray(lengths), jnp.asarray(remaining))
-        toks = np.asarray(toks)
+        tr = get_tracer()
+        with tr.span("decode_scan", track=self.track, lanes=n_act,
+                     scan=k_eff), annotation(f"decode:{w}x{k_eff}"):
+            self.pool, tok_o, lengths_o, remaining_o, toks = fn(
+                self.params, self.pool, jnp.asarray(tok[:, None]),
+                jnp.asarray(bt), jnp.asarray(lengths),
+                jnp.asarray(remaining))
+            toks = np.asarray(toks)
         self.last_tok[act] = np.asarray(tok_o)[:n_act, 0]
         self.lengths[act] = np.asarray(lengths_o)[:n_act]
         self.remaining[act] = np.asarray(remaining_o)[:n_act]
@@ -585,6 +641,7 @@ class PagedArmScheduler:
             if self.remaining[i] == 0:
                 self._release(i, register=True)
                 retired.append(lane)
+                tr.instant("retire", track=self.track, req=lane.req.rid)
         return retired
 
     # ------------------------------------------------------------- metrics
@@ -601,6 +658,8 @@ class PagedArmScheduler:
             "prefill_chunks": self.prefill_chunks,
             "decode_dispatches": self.decode_dispatches,
             "decoded_tokens": self.decoded_tokens,
+            "lane_steps": self.lane_steps,
+            "active_lane_frac_sum": round(self._active_frac_sum, 6),
             "batch_occupancy": round(occ, 4),
             "mean_active_lanes": round(act, 4),
             "free_blocks": self.alloc.free_blocks,

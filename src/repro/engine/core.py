@@ -14,6 +14,7 @@ import warnings
 from typing import List, Optional, Protocol, runtime_checkable
 
 from repro.engine.types import EngineStats, Outcome, Request
+from repro.obs import get_tracer
 
 
 @runtime_checkable
@@ -49,33 +50,43 @@ class PlacementEngine:
         time at high arrival rates.
         """
         requests = list(requests)
-        for r in requests:
-            if r.arrival_s is None:
-                r.arrival_s = self.backend.now
-        undecided = [r for r in requests if r.decision is None]
-        if len(undecided) > 1 and hasattr(self.policy, "decide_batch"):
-            t0 = time.perf_counter()
-            arms = self.policy.decide_batch(undecided)
-            self.decide_time_s += time.perf_counter() - t0
-            self.n_decisions += len(undecided)
-            for r, arm in zip(undecided, arms):
-                r.decision = int(arm)
-        else:
-            for r in undecided:
+        if not requests:
+            return
+        tr = get_tracer()
+        with tr.span("admit", n=len(requests)):
+            for r in requests:
+                if r.arrival_s is None:
+                    r.arrival_s = self.backend.now
+                tr.instant("admit", req=r.rid)
+            undecided = [r for r in requests if r.decision is None]
+            if len(undecided) > 1 and hasattr(self.policy, "decide_batch"):
                 t0 = time.perf_counter()
-                r.decision = int(self.policy.decide(r))
+                with tr.span("decide", n=len(undecided), batched=True):
+                    arms = self.policy.decide_batch(undecided)
                 self.decide_time_s += time.perf_counter() - t0
-                self.n_decisions += 1
-        for r in requests:
-            self.backend.submit(r)
+                self.n_decisions += len(undecided)
+                for r, arm in zip(undecided, arms):
+                    r.decision = int(arm)
+            else:
+                for r in undecided:
+                    t0 = time.perf_counter()
+                    with tr.span("decide", req=r.rid):
+                        r.decision = int(self.policy.decide(r))
+                    self.decide_time_s += time.perf_counter() - t0
+                    self.n_decisions += 1
+            for r in requests:
+                self.backend.submit(r)
 
     # ------------------------------------------------------------ execution
     def step(self) -> List[Outcome]:
         """One backend step; completed outcomes feed the policy and stats."""
         outcomes = self.backend.step(self.policy)
+        tr = get_tracer()
         for o in outcomes:
             self.policy.observe(o)
             self.stats.record(o)
+            tr.instant("observe", req=o.request.rid,
+                       violated=bool(o.violated))
         return outcomes
 
     def run(self, source=None, n_intervals: int = 100) -> dict:
@@ -109,7 +120,8 @@ class PlacementEngine:
         for f in ("prefix_hit_rate", "cow_copies", "preemptions",
                   "spilled_blocks", "kv_capacity_x", "kv_block_bytes",
                   "weight_quant_max_err", "blocks_shipped", "transfer_bytes",
-                  "ttft_s"):
+                  "ttft_s", "ship_latency_p50", "ship_latency_p95",
+                  "ship_latency_p99"):
             if f in extra:
                 setattr(self.stats, f, extra[f])
         sched = self.decide_time_s + extra.pop("place_time_s", 0.0)

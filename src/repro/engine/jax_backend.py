@@ -39,6 +39,7 @@ from repro.configs.base import ArchConfig
 from repro.dist import api as A
 from repro.engine.types import (COMPRESSED, LAYER, SEMANTIC, Outcome, Request,
                                 accuracy_for, next_pow2)
+from repro.obs import Histogram, get_tracer, merge_stat_dicts
 
 ARM_MODES = {LAYER: "pipeline", SEMANTIC: "semantic", COMPRESSED: "fsdp"}
 
@@ -155,10 +156,17 @@ class JaxBackend:
                 store = CacheStore(
                     pf, dc, timeout_s=self.ship_timeout_s,
                     on_requeue=lambda lane, a=arm: self._requeue(a, lane))
+                # trace tracks: one Perfetto process row per arm, the
+                # prefill / ship / decode workers as parallel threads
+                label = f"arm{arm}:{ARM_MODES[arm]}"
+                pf.track = (label, pf.track[1])
+                dc.track = (label, dc.track[1])
+                store.track = (label, "ship")
                 self._disagg[arm] = (pf, dc, store)
             else:
-                self._paged[arm] = PagedArmScheduler(
-                    r.model, self.params[arm], **kw)
+                sched = PagedArmScheduler(r.model, self.params[arm], **kw)
+                sched.track = (f"arm{arm}:{ARM_MODES[arm]}", sched.track[1])
+                self._paged[arm] = sched
 
     # ------------------------------------------------------------- lifecycle
     @property
@@ -192,6 +200,8 @@ class JaxBackend:
         heapq.heappush(self._queues[req.decision],
                        (deadline, self._seq, enq, req))
         self._seq += 1
+        get_tracer().instant("place", req=req.rid, arm=req.decision,
+                             mode=ARM_MODES[req.decision])
 
     def _requeue(self, arm: int, lane) -> None:
         """A timed-out shipment's request goes back onto the arm queue for a
@@ -369,11 +379,15 @@ class JaxBackend:
         arm = self._pick_arm()
         if arm is None:
             return []
-        if arm in self._disagg:
-            return self._step_disagg(arm)
-        if arm in self._paged:
-            return self._step_paged(arm)
-        return self._step_legacy(arm)
+        with get_tracer().span("step", arm=arm) as sp:
+            if arm in self._disagg:
+                out = self._step_disagg(arm)
+            elif arm in self._paged:
+                out = self._step_paged(arm)
+            else:
+                out = self._step_legacy(arm)
+            sp.set(retired=len(out))
+        return out
 
     # --------------------------------------------------------------- metrics
     def extra_metrics(self) -> dict:
@@ -391,39 +405,26 @@ class JaxBackend:
                 for (a, b, s), n in sorted(self._legacy_buckets.items())}
         scheds = list(self._all_scheds())
         if scheds:
-            # per-pool ratios/errors are properties of each arm's layout, not
-            # flow counters: report the max across arms instead of a sum
-            ratio_keys = ("kv_block_bytes", "kv_block_bytes_f32",
-                          "kv_capacity_x", "weight_quant_bits",
-                          "weight_quant_max_err", "weight_quant_mean_err")
-            agg: Dict[str, float] = {}
-            for sched in scheds:
-                for k, v in sched.stats().items():
-                    if k in ("batch_occupancy", "mean_active_lanes",
-                             "prefix_hit_rate"):
-                        continue
-                    if k in ratio_keys:
-                        agg[k] = max(agg.get(k, v), v)
-                        continue
-                    agg[k] = agg.get(k, 0) + v
-            tokens = sum(s.decoded_tokens for s in scheds)
-            steps = sum(s.lane_steps for s in scheds)
-            # for a disagg fleet only the decode workers dispatch scans, so
-            # this IS decode-lane occupancy (prefill lanes contribute zero
+            # one registry under the producer's declared kinds: counters sum
+            # across arms/roles, per-pool layout gauges take the max, and
+            # ratios recompute from the MERGED counters — token-weighted
+            # prefix_hit_rate, and batch_occupancy that for a disagg fleet
+            # IS decode-lane occupancy (prefill lanes contribute zero
             # lane-steps by construction)
-            agg["batch_occupancy"] = round(tokens / max(steps, 1), 4)
-            # token-weighted across arms: cached prompt tokens / prompt
-            # tokens that joins would otherwise have had to prefill
-            agg["prefix_hit_rate"] = round(
-                agg.get("prefix_hit_tokens", 0)
-                / max(agg.get("prefix_query_tokens", 0), 1), 4)
-            m.update(agg)
+            m.update(merge_stat_dicts((s.stats() for s in scheds),
+                                      kinds=type(scheds[0]).STAT_KINDS))
         elif self._legacy_lane_steps:
             m["batch_occupancy"] = round(
                 self._legacy_useful / self._legacy_lane_steps, 4)
-        for _, _, store in self._disagg.values():
-            for k, v in store.stats().items():
-                m[k] = m.get(k, 0) + v
+        if self._disagg:
+            stores = [st for _, _, st in self._disagg.values()]
+            m.update(merge_stat_dicts(s.stats() for s in stores))
+            ship = Histogram()
+            for s in stores:
+                ship.merge(s.ship_latency)
+            if ship.n:
+                for q in (50, 95, 99):
+                    m[f"ship_latency_p{q}"] = round(ship.percentile(q), 6)
         if self._ttfts:
             m["ttft_s"] = round(float(np.mean(self._ttfts)), 6)
         return m

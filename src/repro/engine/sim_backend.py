@@ -23,9 +23,13 @@ import numpy as np
 from repro.configs.paper_workloads import WORKLOADS
 from repro.engine.types import (APPS, SEMANTIC, Outcome, Request,
                                 accuracy_for)
+from repro.obs import get_tracer
 from repro.sim.simulator import ACTIVATION_MB, fragment_plan
 
 CORES = 4.0
+
+#: trace track for the vectorized testbed's per-tick phases
+SIM_TRACK = ("sim", "testbed")
 
 
 class ScaledNetwork:
@@ -196,6 +200,8 @@ class SimBackend:
         self._open[req.rid] = len(fids)
         self._requests[req.rid] = req
         self.unplaced.extend(fids)
+        get_tracer().instant("place", track=SIM_TRACK, req=req.rid,
+                             frags=len(fids))
 
     # ------------------------------------------------------------- placement
     def _place(self, policy) -> None:
@@ -234,10 +240,24 @@ class SimBackend:
 
     # -------------------------------------------------------------- dynamics
     def step(self, policy) -> List[Outcome]:
+        tr = get_tracer()
         t0 = time.perf_counter()
-        self._place(policy)
+        n_waiting = len(self.unplaced)
+        with tr.span("place_frags", track=SIM_TRACK, waiting=n_waiting) as sp:
+            self._place(policy)
+            sp.set(placed=n_waiting - len(self.unplaced))
         self.place_time_s += time.perf_counter() - t0
 
+        with tr.span("sim_tick", track=SIM_TRACK, t=round(self.t, 3),
+                     live=len(self._live_fids)):
+            outcomes = self._tick()
+        for o in outcomes:
+            tr.instant("retire", track=SIM_TRACK, req=o.request.rid,
+                       violated=bool(o.violated))
+        return outcomes
+
+    def _tick(self) -> List[Outcome]:
+        """One dt of the vectorized host/CPU-share dynamics."""
         outcomes: List[Outcome] = []
         active_counts = np.zeros(self.n_hosts, np.int64)
         if self._live_fids:

@@ -14,6 +14,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.configs.paper_workloads import WORKLOADS
+from repro.obs.metrics import Histogram
 
 # Split decisions — shared by repro.sim, repro.core.mab and both backends.
 LAYER, SEMANTIC, COMPRESSED = 0, 1, 2
@@ -148,6 +149,19 @@ class EngineStats:
     blocks_shipped: int = 0
     transfer_bytes: int = 0
     ttft_s: float = 0.0
+    # ship latency percentiles (open shipment -> seated on the decode
+    # worker), mirrored from the cache store's histogram via extra_metrics
+    ship_latency_p50: float = 0.0
+    ship_latency_p95: float = 0.0
+    ship_latency_p99: float = 0.0
+    # streaming per-request latency distributions (repro.obs log-bucket
+    # histograms): response time, queue wait, TTFT and TPOT (per-output-
+    # token latency after the first).  Percentiles come out of these —
+    # scalar means alone hide exactly the tail the SLA metric punishes.
+    response_hist: Histogram = field(default_factory=Histogram)
+    queue_hist: Histogram = field(default_factory=Histogram)
+    ttft_hist: Histogram = field(default_factory=Histogram)
+    tpot_hist: Histogram = field(default_factory=Histogram)
 
     def record(self, o: Outcome) -> None:
         self.completed += 1
@@ -159,6 +173,30 @@ class EngineStats:
         self.queue_waits.append(o.queue_wait_s)
         self.accuracies.append(o.accuracy)
         self.decisions.append(o.decision)
+        self.response_hist.observe(o.latency_s)
+        self.queue_hist.observe(o.queue_wait_s)
+        req = o.request
+        if req.ttft_s > 0:
+            self.ttft_hist.observe(req.ttft_s)
+            n_out = len(req.output) if req.output is not None else req.max_new
+            if n_out > 1:
+                # ttft and latency are both admission-based, so the delta
+                # is pure decode time for the remaining n_out - 1 tokens
+                self.tpot_hist.observe(
+                    max(o.latency_s - req.ttft_s, 0.0) / (n_out - 1))
+
+    def percentiles(self) -> dict:
+        """p50/p95/p99 over the streaming histograms (keys absent until the
+        matching signal has been observed — sim runs carry no TTFT)."""
+        out = {}
+        for prefix, h in (("response", self.response_hist),
+                          ("queue_wait", self.queue_hist),
+                          ("ttft", self.ttft_hist),
+                          ("tpot", self.tpot_hist)):
+            for q in (50, 95, 99):
+                if h.n:
+                    out[f"{prefix}_p{q}"] = round(h.percentile(q), 6)
+        return out
 
     def summary(self) -> dict:
         n = max(self.completed, 1)
@@ -177,4 +215,5 @@ class EngineStats:
             "decisions_semantic_frac": round(float(np.mean(
                 [d == SEMANTIC for d in self.decisions])), 4)
             if self.decisions else 0.0,
+            **self.percentiles(),
         }
