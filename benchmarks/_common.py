@@ -108,7 +108,7 @@ def run_mode(mode: str, trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
              scan_tokens: int, cache_len: int = 32, block_size: int = 8,
              prefix_sharing: bool = False, num_blocks=None,
              kv_dtype: str = "f32", fleet=None, reps: int = 3,
-             trace_path=None) -> dict:
+             trace_path=None, seed: int = 0) -> dict:
     """Drive one serving configuration through warmup + ``reps`` identical
     timed passes (best wall wins) and report per-pass warmup-delta
     counters.  ``fleet="disagg"`` runs the prefill/decode worker pair with
@@ -134,7 +134,7 @@ def run_mode(mode: str, trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
     # timed pass will reuse — the timed figure is the steady-state hit
     # regime.
     for _ in range(2 if prefix_sharing else 1):
-        warm_waves, warm_reqs = trace_fn(n_reqs, seed=0)
+        warm_waves, warm_reqs = trace_fn(n_reqs, seed=seed)
         i = 0
         for w in warm_waves:
             eng.submit(warm_reqs[i:i + w])
@@ -153,7 +153,7 @@ def run_mode(mode: str, trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
         old_tracer = set_tracer(tracer)
     try:
         for _ in range(reps):
-            waves, reqs = trace_fn(n_reqs, seed=0)
+            waves, reqs = trace_fn(n_reqs, seed=seed)
             t0 = time.perf_counter()
             i = 0
             for w in waves:
@@ -192,6 +192,7 @@ def run_mode(mode: str, trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
         "mean_response_s": round(float(np.mean(lat)), 4),
         "p99_response_s": round(float(np.percentile(lat, 99)), 4),
         "sla_violation": round(float(np.mean(viol)), 4),
+        "seed": seed,
     }
     # timed-pass percentile fields (exact, over the final pass's requests);
     # p99_response_s / p99_ttft_s stay for older consumers
@@ -229,4 +230,103 @@ def run_mode(mode: str, trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
                   "ship_latency_p99"):
             if k in m:
                 out[k] = m[k]
+    return out
+
+
+def run_chaos(trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
+              scan_tokens: int, cache_len: int = 32, block_size: int = 8,
+              num_blocks=None, kv_dtype: str = "f32", fleet: str = "disagg",
+              seed: int = 0, fault_seed: int = 9, plan=None,
+              ship_timeout_s: float = 0.05) -> dict:
+    """Chaos twin-run: drive the SAME seeded trace through a clean backend
+    and through one wired to a seeded ``FaultPlan`` (arm blackout, dropped
+    ship wave, transient dispatch errors), then check that every surviving
+    faulted request produced bit-identical tokens to its clean twin.
+
+    Both passes are single COLD passes — ``run_mode``'s warmup+reps harness
+    would smear the step-indexed fault firing across compile stalls.  The
+    wall-clock delta therefore includes compilation on both sides and is a
+    coarse throughput figure, not a steady-state one.  Faults fire on the
+    backend's step counter, so the plan replays identically across runs."""
+    from repro.engine import FixedPolicy, LAYER, PlacementEngine
+    from repro.engine.jax_backend import JaxBackend
+    from repro.faults import (ARM_BLACKOUT, DISPATCH_ERROR, SHIP_DROP, Fault,
+                              FaultPlan)
+
+    if plan is None:
+        # canonical chaos plan: one mid-flight arm blackout, two dropped
+        # ship waves, a burst of transient dispatch errors — the acceptance
+        # trio, step-indexed so it lands while work is in flight
+        plan = FaultPlan([
+            Fault(at=2.0, kind=SHIP_DROP),
+            Fault(at=3.0, kind=ARM_BLACKOUT, target=LAYER, duration=3.0),
+            Fault(at=5.0, kind=DISPATCH_ERROR, count=2),
+            Fault(at=9.0, kind=SHIP_DROP),
+        ], seed=fault_seed)
+
+    def _build(faults):
+        be = JaxBackend(cfg, mesh, cache_len=cache_len, max_batch=max_batch,
+                        decode="paged", block_size=block_size,
+                        scan_tokens=scan_tokens, prefix_sharing=True,
+                        num_blocks=num_blocks, kv_dtype=kv_dtype, fleet=fleet,
+                        ship_timeout_s=ship_timeout_s, faults=faults,
+                        max_ship_retries=8)
+        return PlacementEngine(FixedPolicy(LAYER, placement=None), be)
+
+    def _run(eng):
+        waves, reqs = trace_fn(n_reqs, seed=seed)
+        for r in reqs:
+            r.arrival_s = 0.0   # deadlines = sla_s: EDF order is wall-free
+        t0 = time.perf_counter()
+        i = 0
+        for w in waves:
+            eng.submit(reqs[i:i + w])
+            i += w
+            eng.step()
+        eng.drain()
+        return time.perf_counter() - t0, reqs
+
+    clean_eng, chaos_eng = _build(None), _build(plan)
+    wall_clean, clean_reqs = _run(clean_eng)
+    wall_chaos, chaos_reqs = _run(chaos_eng)
+    m = chaos_eng.summary()
+
+    generated = sum(r.max_new for r in clean_reqs)
+    clean_out = {r.rid: r.output for r in clean_reqs}
+    survivors = mismatched = lost = 0
+    for r in chaos_reqs:
+        if r.output is None:
+            lost += 1           # shed/failed terminals never produce tokens
+            continue
+        survivors += 1
+        twin = clean_out.get(r.rid)
+        if twin is None or not np.array_equal(r.output, twin):
+            mismatched += 1
+    shed, failed = m.get("shed", 0), m.get("failed", 0)
+    out = {
+        "seed": seed,
+        "fault_seed": plan.seed,
+        "fault_plan": dict(plan.counts()),
+        "n_reqs": n_reqs,
+        "completed": m["completed"],
+        "completion_rate": round(m["completed"] / n_reqs, 4),
+        "shed": shed,
+        "failed": failed,
+        # requests with no tokens and no shed/failed terminal: truly lost —
+        # the recovery invariant is that this is ALWAYS zero
+        "lost": lost - shed - failed,
+        "survivors": survivors,
+        "parity_mismatches": mismatched,
+        "faults_injected": m.get("faults_injected", 0),
+        "retries": m.get("retries", 0),
+        "re_executions": m.get("re_executions", 0),
+        "recovered": m.get("recovered", 0),
+        "tokens_per_s_clean": round(generated / wall_clean, 2),
+        "tokens_per_s_chaos": round(generated / wall_chaos, 2),
+        "throughput_delta_x": round(wall_clean / wall_chaos, 4),
+    }
+    for q in (50, 95, 99):
+        k = f"recovery_latency_p{q}"
+        if k in m:
+            out[k] = m[k]
     return out

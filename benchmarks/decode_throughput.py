@@ -47,7 +47,7 @@ sys.path.insert(0, str(REPO / "src"))
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
 
 from _common import (build_mixed_trace, build_shared_trace,  # noqa: E402
-                     build_trace, run_mode)
+                     build_trace, run_chaos, run_mode)
 
 
 def main(argv=None):
@@ -58,6 +58,10 @@ def main(argv=None):
     ap.add_argument("--n-reqs", type=int, default=None)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--scan-tokens", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace seed threaded through every builder pass")
+    ap.add_argument("--fault-seed", type=int, default=9,
+                    help="seed recorded on the chaos-run FaultPlan")
     ap.add_argument("--out", default=str(REPO / "BENCH_decode.json"))
     ap.add_argument("--trace-out", default=None,
                     help="rerun the mixed disagg config with repro.obs "
@@ -84,17 +88,19 @@ def main(argv=None):
     mesh = jax.make_mesh((1, 1), ("data", "model"))
 
     # record-keeping build only: run_mode regenerates the identical trace
-    # internally (same builder, same n_reqs, seed=0) for each timed pass
-    waves, reqs = build_trace(n_reqs, seed=0)
+    # internally (same builder, same n_reqs, same seed) for each timed pass
+    waves, reqs = build_trace(n_reqs, seed=args.seed)
     results = {"trace": {"n_reqs": n_reqs, "waves": len(waves),
                          "generated_tokens": sum(r.max_new for r in reqs),
                          "arch": args.arch, "tiny": args.tiny,
                          "max_batch": args.max_batch,
-                         "scan_tokens": args.scan_tokens}}
+                         "scan_tokens": args.scan_tokens,
+                         "seed": args.seed}}
     for mode in ("gang", "paged"):
         results[mode] = run_mode(mode, build_trace, n_reqs, cfg, mesh,
                                  max_batch=args.max_batch,
-                                 scan_tokens=args.scan_tokens)
+                                 scan_tokens=args.scan_tokens,
+                                 seed=args.seed)
         print(f"{mode}: {json.dumps(results[mode])}")
 
     g, p = results["gang"], results["paged"]
@@ -113,7 +119,7 @@ def main(argv=None):
 
     # ---- shared-prefix trace: prefix sharing OFF (PR 3 baseline) vs ON ----
     n_shared = n_reqs
-    sw, sreqs = build_shared_trace(n_shared, seed=0)
+    sw, sreqs = build_shared_trace(n_shared, seed=args.seed)
     results["shared_trace"] = {
         "n_reqs": n_shared, "waves": len(sw), "n_families": 3,
         "head_len": 96,
@@ -122,7 +128,7 @@ def main(argv=None):
         results[name] = run_mode(
             "paged", build_shared_trace, n_shared, cfg, mesh,
             max_batch=args.max_batch, scan_tokens=args.scan_tokens,
-            cache_len=112, prefix_sharing=sharing)
+            cache_len=112, prefix_sharing=sharing, seed=args.seed)
         print(f"{name}: {json.dumps(results[name])}")
     c, s = results["paged_cold"], results["paged_prefix"]
     results["prefix_vs_cold"] = {
@@ -147,7 +153,8 @@ def main(argv=None):
     results["paged_pressure"] = run_mode(
         "paged", pressure_trace, n_shared, cfg, mesh,
         max_batch=args.max_batch, scan_tokens=2,
-        cache_len=128, prefix_sharing=True, num_blocks=1 + 24)
+        cache_len=128, prefix_sharing=True, num_blocks=1 + 24,
+        seed=args.seed)
     pr = results["paged_pressure"]
     print("paged_pressure:", json.dumps(pr))
     if pr["completed"] != n_shared:
@@ -164,7 +171,7 @@ def main(argv=None):
         "paged", pressure_trace, n_shared, cfg, mesh,
         max_batch=args.max_batch, scan_tokens=2,
         cache_len=128, prefix_sharing=True,
-        num_blocks=1 + int(24 * ratio), kv_dtype="int8")
+        num_blocks=1 + int(24 * ratio), kv_dtype="int8", seed=args.seed)
     pi = results["paged_pressure_int8"]
     results["int8_vs_f32_pressure"] = {
         "kv_capacity_x": pi["kv_capacity_x"],
@@ -187,7 +194,7 @@ def main(argv=None):
     # disagg arm chunk-prefills on a dedicated worker and ships finished KV
     # blocks to the decode worker through the CacheStore.  Both arms run the
     # same pool/scan geometry so the only variable is where prefill happens.
-    mw, mreqs = build_mixed_trace(n_reqs, seed=0)
+    mw, mreqs = build_mixed_trace(n_reqs, seed=args.seed)
     results["mixed_trace"] = {
         "n_reqs": n_reqs, "waves": len(mw),
         "generated_tokens": sum(r.max_new for r in mreqs),
@@ -196,7 +203,7 @@ def main(argv=None):
         results[name] = run_mode(
             "paged", build_mixed_trace, n_reqs, cfg, mesh,
             max_batch=args.max_batch, scan_tokens=args.scan_tokens,
-            cache_len=64, prefix_sharing=True, fleet=fleet)
+            cache_len=64, prefix_sharing=True, fleet=fleet, seed=args.seed)
         print(f"{name}: {json.dumps(results[name])}")
     co, di = results["paged_mixed"], results["disagg_mixed"]
     # disagg batch_occupancy counts decode-worker lane-steps only (prefill
@@ -225,6 +232,25 @@ def main(argv=None):
     if di["p99_response_s"] > 2 * co["p99_response_s"]:
         print("WARNING: disagg p99 response more than 2x colocated")
 
+    # ---- chaos run: seeded fault plan against the disagg fleet ------------
+    # clean twin + faulted run over the SAME mixed trace: an arm blackout,
+    # two dropped ship waves and a transient-dispatch-error burst.  The
+    # recovery invariant is zero lost requests and bit-identical tokens for
+    # every survivor; CI's chaos-smoke job asserts this section.
+    results["chaos"] = run_chaos(
+        build_mixed_trace, n_reqs, cfg, mesh,
+        max_batch=args.max_batch, scan_tokens=args.scan_tokens,
+        cache_len=64, seed=args.seed, fault_seed=args.fault_seed)
+    ch = results["chaos"]
+    print("chaos:", json.dumps(ch))
+    if ch["lost"] != 0:
+        print("WARNING: chaos run lost requests without a shed/failed "
+              "terminal")
+    if ch["parity_mismatches"] != 0:
+        print("WARNING: chaos survivors diverged from the clean twin")
+    if ch["re_executions"] <= 0 and ch["retries"] <= 0:
+        print("WARNING: chaos run exercised no recovery machinery")
+
     # ---- traced rerun: same disagg config with lifecycle tracing on -------
     # the trace must come ~free: every traced region is per dispatch, so
     # traced tokens/s staying within a few % of untraced is the overhead
@@ -234,7 +260,7 @@ def main(argv=None):
             "paged", build_mixed_trace, n_reqs, cfg, mesh,
             max_batch=args.max_batch, scan_tokens=args.scan_tokens,
             cache_len=64, prefix_sharing=True, fleet="disagg",
-            trace_path=args.trace_out)
+            trace_path=args.trace_out, seed=args.seed)
         dt = results["disagg_traced"]
         print(f"disagg_traced: {json.dumps(dt)}")
         ratio = round(dt["tokens_per_s"] / max(di["tokens_per_s"], 1e-9), 4)

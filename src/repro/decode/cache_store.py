@@ -66,6 +66,7 @@ class Shipment:
     arrived: Set[int] = field(default_factory=set)
     deadline: float = 0.0
     opened: float = 0.0          # ship-wave clock stamp (latency origin)
+    attempt: int = 0             # 0 = first ship, k = k-th retry
 
     @property
     def complete(self) -> bool:
@@ -79,13 +80,31 @@ class RequestBlockBuffer:
     arrivals (a block outside the expected set is a protocol error),
     ``pop_ready`` drains complete shipments, ``pop_expired`` drains the
     ones whose deadline passed with blocks still missing.
+
+    Shipments are **attempt-stamped**: re-opening a request after an expiry
+    gets a fresh ledger entry with ``attempt`` bumped, and a ``mark``
+    carrying a stale attempt is *ignored*, never applied — an expired
+    attempt's destination blocks were freed (and may have been reallocated
+    to the retry), so a late arrival mark from it must not falsely complete
+    the new shipment or trip the unexpected-blocks guard.  The attempt
+    counter survives ``pop_expired`` (it drives the retry backoff) and
+    clears on ``pop_ready``.
     """
 
     def __init__(self):
         self._pending: Dict[int, Shipment] = {}
+        self._attempts: Dict[int, int] = {}   # rid -> last opened attempt
+        self.stale_marks = 0
 
     def __len__(self) -> int:
         return len(self._pending)
+
+    def peek_attempt(self, rid: int) -> int:
+        """The attempt number the NEXT ``open`` for ``rid`` would get."""
+        return self._attempts.get(rid, -1) + 1
+
+    def clear_attempt(self, rid: int) -> None:
+        self._attempts.pop(rid, None)
 
     def open(self, lane: Lane, dst_blocks: Sequence[int], n_shared: int,
              expected: Set[int], deadline: float,
@@ -95,30 +114,49 @@ class RequestBlockBuffer:
             raise ValueError(f"shipment already open for request {rid}")
         if NULL_BLOCK in expected:
             raise ValueError("null block can never be a shipment target")
+        att = self.peek_attempt(rid)
+        self._attempts[rid] = att
         shp = Shipment(lane=lane, dst_blocks=list(dst_blocks),
                        n_shared=n_shared, expected=set(expected),
-                       deadline=deadline, opened=opened)
+                       deadline=deadline, opened=opened, attempt=att)
         self._pending[rid] = shp
         return shp
 
-    def mark(self, rid: int, block_ids: Sequence[int]) -> None:
+    def mark(self, rid: int, block_ids: Sequence[int],
+             attempt: Optional[int] = None) -> bool:
+        """Record arrivals for ``rid``; returns False for marks that no
+        longer apply (shipment gone, or ``attempt`` stale).  ``attempt``
+        None keeps the legacy trust-the-caller behavior."""
         shp = self._pending.get(rid)
         if shp is None:
-            return                       # already expired and requeued
+            return False                 # already expired and requeued
+        if attempt is not None and attempt != shp.attempt:
+            self.stale_marks += 1        # late arrival from a dead attempt
+            return False
         extra = set(block_ids) - shp.expected
         if extra:
             raise ValueError(
                 f"request {rid}: arrival of unexpected blocks {sorted(extra)}")
         shp.arrived.update(block_ids)
+        return True
 
     def pop_ready(self) -> List[Shipment]:
         done = [rid for rid, s in self._pending.items() if s.complete]
+        for rid in done:
+            self._attempts.pop(rid, None)
         return [self._pending.pop(rid) for rid in done]
 
     def pop_expired(self, now: float) -> List[Shipment]:
         late = [rid for rid, s in self._pending.items()
                 if not s.complete and now >= s.deadline]
         return [self._pending.pop(rid) for rid in late]
+
+    def pop_all(self) -> List[Shipment]:
+        """Drain every in-flight shipment (arm blackout: the receiver pool
+        is gone, nothing can complete).  Attempt counters survive."""
+        out = list(self._pending.values())
+        self._pending.clear()
+        return out
 
     def earliest_deadline(self) -> Optional[float]:
         live = [s.lane.deadline for s in self._pending.values()]
@@ -136,12 +174,25 @@ class CacheStore:
     single-device fleet used by fast in-process tests).
 
     ``on_requeue(lane)`` fires when a shipment times out — the engine
-    pushes the (reset) request back onto the arm queue.
+    pushes the (reset) request back onto the arm queue.  Retries back off
+    exponentially (``timeout_s * 2^attempt`` ledger deadlines); a request
+    that exhausts ``max_ship_retries`` attempts is handed to ``on_fail``
+    instead of retrying forever (None keeps retrying — the legacy
+    behavior).  ``injector`` (a ``repro.faults.FaultInjector``) lets a
+    seeded plan drop, duplicate or delay whole ship waves.
+
+    Under receiver pressure the store *preempts* rather than only defers:
+    if an arriving shipment (or its block allocation) is more urgent than
+    a seated decode lane, the latest-deadline strictly-later victim lane
+    is spilled for full re-execution (``dst.evict_latest``) to make room.
     """
 
     def __init__(self, src: PagedArmScheduler, dst: PagedArmScheduler, *,
                  timeout_s: float = 30.0,
-                 on_requeue: Optional[Callable[[Lane], None]] = None):
+                 on_requeue: Optional[Callable[[Lane], None]] = None,
+                 max_ship_retries: Optional[int] = None,
+                 on_fail: Optional[Callable[[Lane], None]] = None,
+                 injector=None):
         if src.role != "prefill" or dst.role != "decode":
             raise ValueError("CacheStore wants a prefill src and decode dst")
         if src.block_size != dst.block_size:
@@ -152,7 +203,14 @@ class CacheStore:
         self.dst = dst
         self.timeout_s = timeout_s
         self.on_requeue = on_requeue
+        self.max_ship_retries = max_ship_retries
+        self.on_fail = on_fail
+        self.injector = injector
         self.ledger = RequestBlockBuffer()
+        # injected-delay staging: (release_t, rid, dst_ids, attempt) marks
+        # applied once the owner clock passes release_t — racing the
+        # (backed-off) ledger deadline, which is the whole point
+        self._delayed: List[tuple] = []
         self.fleet = (src.device is not None and dst.device is not None
                       and src.device != dst.device)
         if self.fleet and src.alloc.num_blocks != dst.alloc.num_blocks:
@@ -178,6 +236,10 @@ class CacheStore:
         self.ship_deferred = 0
         self.ship_requeues = 0
         self.ship_dropped_waves = 0
+        self.ship_retries = 0              # re-opened (attempt > 0) shipments
+        self.ship_failed = 0               # retry budget exhausted
+        self.decode_spills = 0             # backpressure lane evictions
+        self.delayed_marks = 0             # injected-delay marks staged
         self.compile_stats: Dict[str, int] = {}
         # open-shipment -> seated-arrival latency (merged up by the backend)
         self.ship_latency = Histogram()
@@ -235,6 +297,18 @@ class CacheStore:
             if shared:
                 self.dst.alloc.share(shared)
             ids = self.dst.alloc.alloc(total - len(shared))
+            while ids is None:
+                # receiver-pool backpressure: spill the latest-deadline
+                # strictly-less-urgent seated decode lane (full reset +
+                # requeue = deterministic re-execution) and retry — defer
+                # only when every seated lane is at least as urgent
+                victim = self.dst.evict_latest(lane.deadline, now)
+                if victim is None:
+                    break
+                self.decode_spills += 1
+                if self.on_requeue is not None:
+                    self.on_requeue(victim)
+                ids = self.dst.alloc.alloc(total - len(shared))
             if ids is None:
                 if shared:
                     self.dst.alloc.free(shared)
@@ -244,49 +318,91 @@ class CacheStore:
             n_ship = n_written - len(shared)
             src_ids = lane.blocks[len(shared):n_written]
             dst_blocks = shared + ids
-            self.ledger.open(lane, dst_blocks, len(shared),
-                             set(ids[:n_ship]), now + self.timeout_s,
-                             opened=now)
-            wave.append((lane, src_ids, ids[:n_ship]))
+            # retry deadlines back off exponentially with the attempt count
+            att = self.ledger.peek_attempt(lane.req.rid)
+            self.ship_retries += int(att > 0)
+            shp = self.ledger.open(lane, dst_blocks, len(shared),
+                                   set(ids[:n_ship]),
+                                   now + self.timeout_s * (2 ** min(att, 6)),
+                                   opened=now)
+            wave.append((lane, src_ids, ids[:n_ship], shp.attempt))
             self.ship_skipped_blocks += len(shared)
             tr.instant("ship", track=self.track, req=lane.req.rid,
-                       blocks=n_ship, shared=len(shared))
+                       blocks=n_ship, shared=len(shared), attempt=att)
 
-        flat_src = [b for _, s, _ in wave for b in s]
-        flat_dst = [b for _, _, d in wave for b in d]
+        flat_src = [b for _, s, _, _ in wave for b in s]
+        flat_dst = [b for _, _, d, _ in wave for b in d]
         sp.set(shipped=len(wave), blocks=len(flat_src))
+        fault = None
         if flat_src:
             with annotation(f"ship:{next_pow2(len(flat_src))}"):
                 self._transfer(flat_src, flat_dst)
             self.blocks_shipped += len(flat_src)
             self.transfer_bytes += len(flat_src) * self.src.kv_block_bytes
             self.ship_waves += 1
-        for lane, _, dst_ids in wave:
+            # one injected fault charge applies to the WHOLE wave's marks
+            if self.injector is not None:
+                fault = self.injector.take_ship_fault()
+                if fault is not None:
+                    tr.instant("fault_injected", track=self.track,
+                               kind=fault[0])
+        if fault is not None and fault[0] == "ship_drop":
+            self.ship_dropped_waves += 1
+        for lane, _, dst_ids, att in wave:
             # source-side epilogue first: the prefill worker registers the
             # prompt in ITS index and frees the refs whether or not the
             # transfer is acknowledged — a lost wave re-prefills from cache
             self.src.finish_shipped(lane)
-            if self.drop_filter is not None and self.drop_filter(lane.req.rid):
+            rid = lane.req.rid
+            if self.drop_filter is not None and self.drop_filter(rid):
                 self.ship_dropped_waves += 1
+            elif fault is not None and fault[0] == "ship_drop":
+                # arrival marks lost: the ledger entry expires and the
+                # request retries with a backed-off deadline
+                lane.req.fault_t = now
+            elif fault is not None and fault[0] == "ship_delay":
+                # marks arrive late — possibly after the deadline, which is
+                # exactly the stale-attempt race the ledger must absorb
+                self._delayed.append((now + fault[1], rid, dst_ids, att))
+                self.delayed_marks += 1
             else:
-                self.ledger.mark(lane.req.rid, dst_ids)
+                self.ledger.mark(rid, dst_ids, attempt=att)
+                if fault is not None and fault[0] == "ship_dup":
+                    # duplicated arrival marks: idempotent by construction
+                    self.ledger.mark(rid, dst_ids, attempt=att)
 
     def poll(self, now: float) -> int:
-        """Expire overdue shipments (free receiver refs, requeue the
-        request) and seat completed arrivals into free decode lanes.
+        """Apply due delayed marks, expire overdue shipments (free receiver
+        refs, requeue — or fail past the retry budget), and seat completed
+        arrivals into free decode lanes, spilling strictly-later-deadline
+        seated lanes when an arrival is more urgent than all free capacity.
         Returns the number of lanes seated."""
         tr = get_tracer()
+        if self._delayed:
+            due = [e for e in self._delayed if e[0] <= now]
+            self._delayed = [e for e in self._delayed if e[0] > now]
+            for _, rid, dst_ids, att in due:
+                # a mark landing after its attempt expired is stale and
+                # ignored by the attempt-stamped ledger
+                self.ledger.mark(rid, dst_ids, attempt=att)
         for shp in self.ledger.pop_expired(now):
             # tail-first, mirroring _release: keeps shorter shared prefixes
             # matchable if the LRU reclaims parked parents later
             self.dst.alloc.free(shp.dst_blocks[::-1])
             lane = shp.lane
-            tr.instant("ship_timeout", track=self.track, req=lane.req.rid,
-                       missing=len(shp.expected - shp.arrived))
-            lane.out = []
-            lane.blocks = []
-            lane.committed = 0
-            lane.first_tok_t = 0.0
+            rid = lane.req.rid
+            tr.instant("ship_timeout", track=self.track, req=rid,
+                       missing=len(shp.expected - shp.arrived),
+                       attempt=shp.attempt)
+            PagedArmScheduler.reset_for_reexec(lane)
+            lane.req.fault_t = lane.req.fault_t or now
+            if self.max_ship_retries is not None and self.on_fail is not None \
+                    and self.ledger.peek_attempt(rid) > self.max_ship_retries:
+                self.ship_failed += 1
+                self.ledger.clear_attempt(rid)
+                tr.instant("ship_failed", track=self.track, req=rid)
+                self.on_fail(lane)
+                continue
             self.ship_requeues += 1
             if self.on_requeue is not None:
                 self.on_requeue(lane)
@@ -298,11 +414,52 @@ class CacheStore:
             heapq.heappush(self._arrived, (lane.deadline, self._seq, lane))
             self._seq += 1
         seated = 0
-        while self._arrived and self.dst.has_free_lane():
+        while self._arrived:
+            if not self.dst.has_free_lane():
+                # seat-level backpressure: an arrival more urgent than the
+                # latest-deadline seated lane takes its seat (the victim
+                # re-executes); otherwise arrivals wait for a retirement
+                victim = self.dst.evict_latest(self._arrived[0][0], now)
+                if victim is None:
+                    break
+                self.decode_spills += 1
+                if self.on_requeue is not None:
+                    self.on_requeue(victim)
             _, _, lane = heapq.heappop(self._arrived)
             self.dst.admit_shipped(lane, now)
             seated += 1
         return seated
+
+    # ------------------------------------------------------------- faults
+    def abort_inflight(self, now: float) -> int:
+        """Arm-blackout response: every in-flight shipment, deferred lane
+        and unseated arrival fails NOW — receiver blocks free, lanes reset
+        for re-execution, requests requeue (stamped for recovery tracking).
+        Attempt counters survive, so the retries still back off."""
+        tr = get_tracer()
+        aborted: List[Lane] = []
+        for shp in self.ledger.pop_all():
+            self.dst.alloc.free(shp.dst_blocks[::-1])
+            aborted.append(shp.lane)
+        for _, _, lane in self._arrived:
+            self.dst.alloc.free(lane.blocks[::-1])
+            aborted.append(lane)
+        self._arrived = []
+        for lane in self._waiting:
+            # deferred lanes still hold their SOURCE refs: release through
+            # the ship epilogue so the re-prefill hits the source index
+            self.src.finish_shipped(lane)
+            aborted.append(lane)
+        self._waiting = []
+        self._delayed = []
+        for lane in aborted:
+            PagedArmScheduler.reset_for_reexec(lane)
+            lane.req.fault_t = now
+            self.ship_requeues += 1
+            tr.instant("ship_aborted", track=self.track, req=lane.req.rid)
+            if self.on_requeue is not None:
+                self.on_requeue(lane)
+        return len(aborted)
 
     # ---------------------------------------------------------- transfer
     def _get_jitted(self, kind: str, key: tuple, build, donate):
@@ -416,6 +573,11 @@ class CacheStore:
             "ship_deferred": self.ship_deferred,
             "ship_requeues": self.ship_requeues,
             "ship_dropped_waves": self.ship_dropped_waves,
+            "ship_retries": self.ship_retries,
+            "ship_failed": self.ship_failed,
+            "ship_stale_marks": self.ledger.stale_marks,
+            "ship_delayed_marks": self.delayed_marks,
+            "decode_spills": self.decode_spills,
             "ship_in_flight": len(self.ledger),
             **{f"compile_{k}": v for k, v in self.compile_stats.items()},
         }

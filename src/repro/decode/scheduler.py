@@ -46,7 +46,7 @@ from repro.decode.paged_model import (make_decode_fn, make_prefill_chunk_fn,
                                       quantize_attn_params,
                                       supports_paged_decode)
 from repro.engine.types import next_pow2
-from repro.obs import annotation, get_tracer
+from repro.obs import Histogram, annotation, get_tracer
 
 
 @dataclass
@@ -189,6 +189,13 @@ class PagedArmScheduler:
         self.cow_copies = 0
         self.preemptions = 0
         self.spilled_blocks = 0
+        # fault-recovery telemetry: full re-executions forced on this
+        # scheduler's lanes (blackout evacuations, backpressure evictions),
+        # fault-disrupted requests re-admitted here, and the fault ->
+        # re-admission latency distribution (merged up by the backend)
+        self.re_executions = 0
+        self.recovered = 0
+        self.recovery_latency = Histogram()
         self.compile_stats: Dict[str, int] = {}
         self.buckets: Dict[str, int] = {}
 
@@ -320,6 +327,80 @@ class PagedArmScheduler:
                 return
             self._preempt(max(victims)[1], now)
 
+    # ---------------------------------------------------- fault recovery
+    def _observe_recovery(self, lane: Lane, now: float) -> None:
+        """A fault-disrupted request just re-seated: close its recovery arc
+        (fault stamp -> re-admission) and clear the stamp."""
+        req = lane.req
+        if req.fault_t <= 0.0:
+            return
+        self.recovery_latency.observe(max(now - req.fault_t, 0.0))
+        self.recovered += 1
+        req.fault_t = 0.0
+        get_tracer().instant("recovery", track=self.track, req=req.rid)
+
+    @staticmethod
+    def reset_for_reexec(lane: Lane) -> None:
+        """Host-side reset to pre-prefill state: the request will re-execute
+        from scratch (deterministic argmax decode -> bit-identical tokens)."""
+        lane.out = []
+        lane.blocks = []
+        lane.n_shared = 0
+        lane.committed = 0
+        lane.first_tok_t = 0.0
+
+    def spill_all(self, now: float, fault_t: Optional[float] = None) -> int:
+        """Blackout response for a colocated/prefill scheduler: preempt every
+        seated lane through the ordinary spill path — blocks park in the
+        prefix cache, lanes queue for resume, and the arm drains nothing
+        until the owner re-enables it.  Returns the number spilled."""
+        seated = [li for li, l in enumerate(self.lanes) if l is not None]
+        for li in seated:
+            if fault_t is not None:
+                self.lanes[li].req.fault_t = fault_t
+            self._preempt(li, now)
+        return len(seated)
+
+    def evacuate(self, now: float,
+                 fault_t: Optional[float] = None) -> List[Lane]:
+        """Blackout response for a decode scheduler: seated lanes cannot
+        resume here (they seat via ``admit_shipped``), so each is fully
+        reset for re-execution — blocks go back (full ones stay matchable,
+        making the re-ship a receiver-side prefix hit) and the caller
+        requeues the requests for a fresh prefill."""
+        out: List[Lane] = []
+        for li, lane in enumerate(self.lanes):
+            if lane is None:
+                continue
+            self._release(li, register=True)
+            self.reset_for_reexec(lane)
+            if fault_t is not None:
+                lane.req.fault_t = fault_t
+            self.re_executions += 1
+            out.append(lane)
+        return out
+
+    def evict_latest(self, deadline: float, now: float) -> Optional[Lane]:
+        """Ship-backpressure preemption: reset the seated lane with the
+        LATEST deadline strictly later than ``deadline`` so an arriving
+        (more urgent) shipment can seat / allocate.  The victim re-executes
+        from prefill (its blocks stay matchable — the re-ship prefix-hits).
+        Returns the evicted lane for requeue, or None if every seated lane
+        is at least as urgent."""
+        victims = [(l.deadline, li) for li, l in enumerate(self.lanes)
+                   if l is not None and l.deadline > deadline]
+        if not victims:
+            return None
+        li = max(victims)[1]
+        lane = self.lanes[li]
+        self._release(li, register=True)
+        self.reset_for_reexec(lane)
+        self.preemptions += 1
+        self.re_executions += 1
+        get_tracer().instant("decode_spill", track=self.track,
+                             req=lane.req.rid)
+        return lane
+
     # -------------------------------------------------------------- joins
     def try_join(self, queue: list, now: float) -> None:
         """Admit the most urgent queued/spilled candidates into free lanes
@@ -430,6 +511,7 @@ class PagedArmScheduler:
             self.prefix_query_tokens += len(seq_toks)
             tr.instant("seat", req=req.rid, cached=covered,
                        resumed=use_resume)
+            self._observe_recovery(lane, now)
             admitted += 1
 
         self._flush_cow(cow_pairs)
@@ -583,6 +665,7 @@ class PagedArmScheduler:
         self.joined += 1
         get_tracer().instant("admit_shipped", track=self.track,
                              req=lane.req.rid, blocks=len(lane.blocks))
+        self._observe_recovery(lane, now)
 
     # ------------------------------------------------------------ dispatch
     def dispatch(self, now: float) -> List[Lane]:
@@ -672,6 +755,8 @@ class PagedArmScheduler:
             "cow_copies": self.cow_copies,
             "preemptions": self.preemptions,
             "spilled_blocks": self.spilled_blocks,
+            "re_executions": self.re_executions,
+            "recovered": self.recovered,
             "kv_block_bytes": self.kv_block_bytes,
             "kv_block_bytes_f32": self.kv_block_bytes_f32,
             # effective-capacity multiplier: KV blocks per byte vs f32

@@ -83,10 +83,14 @@ class PlacementEngine:
         outcomes = self.backend.step(self.policy)
         tr = get_tracer()
         for o in outcomes:
-            self.policy.observe(o)
+            if not (o.shed or o.failed):
+                # degradation terminals carry no execution signal — feeding
+                # them to the policy would punish arms for injected faults
+                self.policy.observe(o)
             self.stats.record(o)
             tr.instant("observe", req=o.request.rid,
-                       violated=bool(o.violated))
+                       violated=bool(o.violated), shed=bool(o.shed),
+                       failed=bool(o.failed))
         return outcomes
 
     def run(self, source=None, n_intervals: int = 100) -> dict:
@@ -121,7 +125,9 @@ class PlacementEngine:
                   "spilled_blocks", "kv_capacity_x", "kv_block_bytes",
                   "weight_quant_max_err", "blocks_shipped", "transfer_bytes",
                   "ttft_s", "ship_latency_p50", "ship_latency_p95",
-                  "ship_latency_p99"):
+                  "ship_latency_p99", "faults_injected", "retries",
+                  "re_executions", "recovered", "recovery_latency_p50",
+                  "recovery_latency_p95", "recovery_latency_p99"):
             if f in extra:
                 setattr(self.stats, f, extra[f])
         sched = self.decide_time_s + extra.pop("place_time_s", 0.0)

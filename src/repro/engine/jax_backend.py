@@ -39,6 +39,7 @@ from repro.configs.base import ArchConfig
 from repro.dist import api as A
 from repro.engine.types import (COMPRESSED, LAYER, SEMANTIC, Outcome, Request,
                                 accuracy_for, next_pow2)
+from repro.faults import ARM_BLACKOUT, FaultInjector, TransientDispatchError
 from repro.obs import Histogram, get_tracer, merge_stat_dicts
 
 ARM_MODES = {LAYER: "pipeline", SEMANTIC: "semantic", COMPRESSED: "fsdp"}
@@ -54,7 +55,10 @@ class JaxBackend:
                  watermark: float = 0.0, kv_dtype: str = "f32",
                  weight_quant: Optional[str] = None,
                  fleet: Optional[str] = None, fleet_devices=None,
-                 ship_timeout_s: float = 30.0):
+                 ship_timeout_s: float = 30.0, faults=None,
+                 max_retries: int = 3, breaker_cooldown: int = 8,
+                 max_ship_retries: Optional[int] = None,
+                 load_shed: bool = False):
         if decode not in ("auto", "paged", "legacy"):
             raise ValueError(f"decode={decode!r}; expected auto|paged|legacy")
         if fleet not in (None, "disagg"):
@@ -81,6 +85,24 @@ class JaxBackend:
         self.weight_quant = weight_quant
         self.fleet = fleet
         self.ship_timeout_s = ship_timeout_s
+        # --- fault plane (repro.faults) -------------------------------
+        # the fault clock is the SCHEDULER STEP COUNTER, not wall time:
+        # a seeded plan fires at identical points in the request stream on
+        # every run, which is what makes chaos replay bit-reproducible
+        self._injector = FaultInjector(faults) if faults is not None else None
+        self._fault_step = 0
+        self.max_retries = max_retries
+        self.breaker_cooldown = breaker_cooldown
+        self.max_ship_retries = max_ship_retries
+        self.load_shed = load_shed
+        self._blackout: Dict[int, int] = {}       # arm -> step it re-opens
+        self._breaker: Dict[int, int] = {}        # arm -> step it re-closes
+        self._backoff: Dict[tuple, int] = {}      # (arm, site) -> retry step
+        self._consec_err: Dict[tuple, int] = {}
+        self.dispatch_retries = 0
+        self.breaker_trips = 0
+        self.shed_count = 0
+        self._failures: List[Outcome] = []        # retry budget exhausted
         # fleet device pool, consumed (prefill_dev, decode_dev) per arm in
         # _ensure_arm order; an exhausted pool colocates on one device
         self._fleet_pool = list(fleet_devices) if fleet_devices else []
@@ -155,7 +177,10 @@ class JaxBackend:
                                        role="decode", device=dc_dev, **kw)
                 store = CacheStore(
                     pf, dc, timeout_s=self.ship_timeout_s,
-                    on_requeue=lambda lane, a=arm: self._requeue(a, lane))
+                    on_requeue=lambda lane, a=arm: self._requeue(a, lane),
+                    max_ship_retries=self.max_ship_retries,
+                    on_fail=lambda lane, a=arm: self._fail(a, lane),
+                    injector=self._injector)
                 # trace tracks: one Perfetto process row per arm, the
                 # prefill / ship / decode workers as parallel threads
                 label = f"arm{arm}:{ARM_MODES[arm]}"
@@ -210,6 +235,110 @@ class JaxBackend:
                        (lane.deadline, self._seq, lane.enq, lane.req))
         self._seq += 1
 
+    def _fail(self, arm: int, lane) -> None:
+        """Terminal failure (ship retry budget exhausted): the request
+        leaves the system with a failed Outcome — honest accounting, never
+        a silent hang."""
+        req = lane.req
+        now = self.now
+        self._failures.append(Outcome(
+            request=req, decision=arm, latency_s=now - lane.enq,
+            queue_wait_s=now - lane.enq, accuracy=0.0, finish_s=now,
+            failed=True))
+        get_tracer().instant("request_failed", req=req.rid, arm=arm)
+
+    # ----------------------------------------------------------- fault plane
+    def _arm_available(self, arm: int) -> bool:
+        return self._blackout.get(arm, 0) <= self._fault_step \
+            and self._breaker.get(arm, 0) <= self._fault_step
+
+    def _apply_faults(self) -> None:
+        """Fire the plan's due faults against the step-counter clock.  Only
+        arm blackouts act here (host churn belongs to SimBackend; ship and
+        dispatch faults are charge pools the hot paths drain)."""
+        tr = get_tracer()
+        for f in self._injector.advance(self._fault_step):
+            if f.kind != ARM_BLACKOUT:
+                continue
+            targets = [f.target] if f.target >= 0 else list(self.runners)
+            for arm in targets:
+                if arm not in self.runners:
+                    continue
+                self._blackout[arm] = self._fault_step \
+                    + max(int(f.duration), 1)
+                tr.instant("fault_injected", kind=ARM_BLACKOUT, arm=arm,
+                           until_step=self._blackout[arm])
+                self._black_out_arm(arm)
+
+    def _black_out_arm(self, arm: int) -> None:
+        """The arm's device pool vanishes for the window: colocated lanes
+        spill through the ordinary preempt/resume path; a disagg fleet
+        spills its prefill lanes, fails every in-flight shipment and fully
+        resets seated decode lanes for re-execution."""
+        now = self.now
+        if arm in self._paged:
+            self._paged[arm].spill_all(now, fault_t=now)
+        elif arm in self._disagg:
+            pf, dc, store = self._disagg[arm]
+            pf.spill_all(now, fault_t=now)
+            store.abort_inflight(now)
+            for lane in dc.evacuate(now, fault_t=now):
+                self._requeue(arm, lane)
+
+    def _dispatch_ok(self, arm: int, site: str) -> bool:
+        """Gate one prefill/decode dispatch.  An injected transient error is
+        raised (BEFORE any device state mutates) and absorbed here: the
+        retry is simply the next step's attempt, exponentially backed off;
+        more than ``max_retries`` consecutive errors trip the arm's circuit
+        breaker for ``breaker_cooldown`` steps."""
+        key = (arm, site)
+        if self._backoff.get(key, 0) > self._fault_step:
+            return False
+        try:
+            if self._injector is not None and \
+                    self._injector.take_dispatch_error(arm, site):
+                raise TransientDispatchError(f"arm {arm} {site} dispatch")
+        except TransientDispatchError:
+            tr = get_tracer()
+            tr.instant("fault_injected", kind="dispatch_error", arm=arm,
+                       site=site)
+            n = self._consec_err.get(key, 0) + 1
+            self._consec_err[key] = n
+            if n > self.max_retries:
+                # retry budget burned back-to-back: open the breaker so the
+                # arm stops eating dispatches until the cooldown passes
+                self._breaker[arm] = self._fault_step + self.breaker_cooldown
+                self._consec_err[key] = 0
+                self.breaker_trips += 1
+                tr.instant("breaker_open", arm=arm,
+                           until_step=self._breaker[arm])
+            else:
+                self.dispatch_retries += 1
+                self._backoff[key] = self._fault_step + 2 ** (n - 1)
+            return False
+        self._consec_err[key] = 0
+        return True
+
+    def _shed_expired(self) -> List[Outcome]:
+        """Deadline-aware load shedding (graceful degradation): queued
+        requests whose deadline already passed are dropped with a ``shed``
+        Outcome instead of burning dispatches on un-meetable work.  Only
+        queued (never in-flight) work sheds, and only past-deadline work."""
+        now = self.now
+        tr = get_tracer()
+        outs: List[Outcome] = []
+        for arm, q in self._queues.items():
+            while q and q[0][0] <= now:
+                _, _, enq, req = heapq.heappop(q)
+                base = req.arrival_s if req.arrival_s is not None else enq
+                outs.append(Outcome(
+                    request=req, decision=arm, latency_s=now - base,
+                    queue_wait_s=now - base, accuracy=0.0, finish_s=now,
+                    shed=True))
+                self.shed_count += 1
+                tr.instant("shed", req=req.rid, arm=arm)
+        return outs
+
     # --------------------------------------------------------------- serving
     def _arm_urgency(self, arm: int) -> Optional[float]:
         """Earliest deadline this arm owes: queue head or in-flight lane."""
@@ -231,7 +360,8 @@ class JaxBackend:
 
     def _pick_arm(self) -> Optional[int]:
         live = [(u, arm) for arm in self._queues
-                if (u := self._arm_urgency(arm)) is not None]
+                if self._arm_available(arm)
+                and (u := self._arm_urgency(arm)) is not None]
         return min(live)[1] if live else None
 
     def _outcome(self, req: Request, arm: int, enq: float, exec_start: float,
@@ -272,11 +402,13 @@ class JaxBackend:
         response time must not absorb an unrelated scan."""
         sched = self._paged[arm]
         sched.try_join(self._queues[arm], self.now)
-        done = sched.prefill_step(self.now)
+        done = sched.prefill_step(self.now) \
+            if self._dispatch_ok(arm, "prefill") else []
         prefill_finish = self.now
         outcomes = [self._lane_outcome(lane, arm, prefill_finish)
                     for lane in done]
-        retired = sched.dispatch(self.now)
+        retired = sched.dispatch(self.now) \
+            if self._dispatch_ok(arm, "decode") else []
         finish = self.now
         outcomes += [self._lane_outcome(lane, arm, finish)
                      for lane in retired]
@@ -293,7 +425,8 @@ class JaxBackend:
         blocks never arrive times out in ``poll`` and requeues."""
         pf, dc, store = self._disagg[arm]
         pf.try_join(self._queues[arm], self.now)
-        done = pf.prefill_step(self.now)
+        done = pf.prefill_step(self.now) \
+            if self._dispatch_ok(arm, "prefill") else []
         prefill_finish = self.now
         # max_new == 1 retires at the prefill worker: its one token came
         # from the chunk logits, nothing needs shipping
@@ -301,7 +434,8 @@ class JaxBackend:
                     for lane in done]
         store.ship(pf.take_ready(), self.now)
         store.poll(self.now)
-        retired = dc.dispatch(self.now)
+        retired = dc.dispatch(self.now) \
+            if self._dispatch_ok(arm, "decode") else []
         finish = self.now
         outcomes += [self._lane_outcome(lane, arm, finish)
                      for lane in retired]
@@ -376,9 +510,18 @@ class JaxBackend:
                 for i, (r, enq) in enumerate(zip(reqs, enqs))]
 
     def step(self, policy=None) -> List[Outcome]:
+        # the fault clock ticks on every step — including idle ones, so
+        # blackout windows and breaker cooldowns always close under drain
+        self._fault_step += 1
+        pre: List[Outcome] = []
+        if self._injector is not None:
+            self._apply_faults()
+        if self.load_shed:
+            pre = self._shed_expired()
         arm = self._pick_arm()
         if arm is None:
-            return []
+            pre += self._take_failures()
+            return pre
         with get_tracer().span("step", arm=arm) as sp:
             if arm in self._disagg:
                 out = self._step_disagg(arm)
@@ -387,6 +530,10 @@ class JaxBackend:
             else:
                 out = self._step_legacy(arm)
             sp.set(retired=len(out))
+        return pre + out + self._take_failures()
+
+    def _take_failures(self) -> List[Outcome]:
+        out, self._failures = self._failures, []
         return out
 
     # --------------------------------------------------------------- metrics
@@ -427,4 +574,26 @@ class JaxBackend:
                     m[f"ship_latency_p{q}"] = round(ship.percentile(q), 6)
         if self._ttfts:
             m["ttft_s"] = round(float(np.mean(self._ttfts)), 6)
+        # fault/recovery plane: injected counts from the plan, retries
+        # (dispatch backoffs + re-opened shipments), full re-executions
+        # (evacuations/evictions + expired-shipment requeues), and the
+        # fault -> re-admission latency distribution across all schedulers
+        if self._injector is not None:
+            m.update(self._injector.stats())
+        m["retries"] = self.dispatch_retries + m.get("ship_retries", 0)
+        m["re_executions"] = m.get("re_executions", 0) \
+            + m.get("ship_requeues", 0)
+        if self.dispatch_retries:
+            m["dispatch_retries"] = self.dispatch_retries
+        if self.breaker_trips:
+            m["breaker_trips"] = self.breaker_trips
+        if self.shed_count:
+            m["shed"] = self.shed_count
+        rec = Histogram()
+        for s in scheds:
+            rec.merge(s.recovery_latency)
+        if rec.n:
+            m["recovered"] = m.get("recovered", 0)
+            for q in (50, 95, 99):
+                m[f"recovery_latency_p{q}"] = round(rec.percentile(q), 6)
         return m

@@ -23,7 +23,8 @@ import numpy as np
 from repro.configs.paper_workloads import WORKLOADS
 from repro.engine.types import (APPS, SEMANTIC, Outcome, Request,
                                 accuracy_for)
-from repro.obs import get_tracer
+from repro.faults import HOST_CRASH, HOST_STALL, FaultInjector
+from repro.obs import Histogram, get_tracer
 from repro.sim.simulator import ACTIVATION_MB, fragment_plan
 
 CORES = 4.0
@@ -100,15 +101,17 @@ class _HostView:
         return int(self._b.host_n_placed[self.hid])
 
     def fits(self, ram_mb: float) -> bool:
-        return self._b.host_ram_used[self.hid] + ram_mb \
-            <= self._b.host_ram_mb[self.hid]
+        b = self._b
+        if b.host_down_until[self.hid] > b.t:
+            return False                       # crashed-out host
+        return b.host_ram_used[self.hid] + ram_mb <= b.host_ram_mb[self.hid]
 
 
 class SimBackend:
     """Vectorized discrete-event execution backend over an edge testbed."""
 
     def __init__(self, *, n_hosts: int = 10, dt: float = 0.1, seed: int = 0,
-                 network_kw: Optional[dict] = None):
+                 network_kw: Optional[dict] = None, faults=None):
         rng = np.random.default_rng(seed)
         self.n_hosts = n_hosts
         self.dt = dt
@@ -148,6 +151,18 @@ class SimBackend:
         # metrics
         self.energy_wh = 0.0
         self.place_time_s = 0.0
+        # fault plane (repro.faults): host churn + stragglers on the sim
+        # clock.  A crashed host displaces its in-flight fragments (progress
+        # lost, re-placed on surviving hosts) and is unplaceable until
+        # ``host_down_until``; a stalled host's effective speed multiplies
+        # by ``host_stall_factor`` until ``host_stall_until``.
+        self._injector = FaultInjector(faults) if faults is not None else None
+        self.host_down_until = np.zeros(n_hosts)
+        self.host_stall_until = np.zeros(n_hosts)
+        self.host_stall_factor = np.ones(n_hosts)
+        self.re_executions = 0            # crash-displaced fragments
+        self.recovered = 0                # fault-stamped requests re-placed
+        self.recovery_latency = Histogram()
 
     # ------------------------------------------------------------- lifecycle
     @property
@@ -203,21 +218,68 @@ class SimBackend:
         get_tracer().instant("place", track=SIM_TRACK, req=req.rid,
                              frags=len(fids))
 
+    # ----------------------------------------------------------- fault plane
+    def _apply_faults(self) -> None:
+        """Fire due faults against the sim clock (vectorized displacement:
+        one pass over live fragments per crash)."""
+        tr = get_tracer()
+        for f in self._injector.advance(self.t):
+            if f.kind not in (HOST_CRASH, HOST_STALL):
+                continue                      # serving-layer kinds: not ours
+            h = f.target % self.n_hosts if f.target >= 0 else 0
+            if f.kind == HOST_STALL:
+                self.host_stall_until[h] = self.t + f.duration
+                self.host_stall_factor[h] = f.magnitude
+                tr.instant("fault_injected", track=SIM_TRACK,
+                           kind=HOST_STALL, host=h, factor=f.magnitude)
+                continue
+            self.host_down_until[h] = self.t + f.duration
+            self._crash_host(h, tr)
+
+    def _crash_host(self, h: int, tr) -> None:
+        """Churn host ``h`` out: every in-flight fragment on it loses its
+        progress and goes back to the unplaced pool (mobile-edge mobility —
+        the work re-executes on surviving hosts)."""
+        displaced = 0
+        for fid in list(self._live_fids):
+            if int(self.f_host[fid]) != h:
+                continue
+            frag = self.fragments[fid]
+            self.f_host[fid] = -1
+            self.f_progress[fid] = 0.0
+            self.f_ready_at[fid] = 0.0
+            self.host_ram_used[h] -= frag.ram_mb
+            self.host_n_placed[h] -= 1
+            req = frag.request
+            if req.fault_t <= 0.0:
+                req.fault_t = self.t
+            self.unplaced.append(fid)
+            displaced += 1
+        self.re_executions += displaced
+        tr.instant("fault_injected", track=SIM_TRACK, kind=HOST_CRASH,
+                   host=h, displaced=displaced)
+
     # ------------------------------------------------------------- placement
     def _place(self, policy) -> None:
         # vectorized fast-path: placement policies exposing array scoring
         # (e.g. LeastLoadedPlacement.place_arrays) skip the per-host views
         fast = getattr(getattr(policy, "placement", None),
                        "place_arrays", None)
+        tr = get_tracer()
+        # crashed hosts advertise no capacity until their window closes
+        host_up = self.host_down_until <= self.t
         still = []
         for fid in self.unplaced:
             frag = self.fragments[fid]
             if fast is not None:
-                h = fast(frag.ram_mb, self.host_ram_mb - self.host_ram_used,
-                         self.host_n_placed, self.host_speed)
+                free = np.where(host_up,
+                                self.host_ram_mb - self.host_ram_used, -1.0)
+                h = fast(frag.ram_mb, free, self.host_n_placed,
+                         self.host_speed)
             else:
                 h = policy.place(frag, self.hosts)
-            if h is None or self.host_ram_used[h] + frag.ram_mb \
+            if h is None or not host_up[h] \
+                    or self.host_ram_used[h] + frag.ram_mb \
                     > self.host_ram_mb[h]:
                 still.append(fid)
                 continue
@@ -225,6 +287,13 @@ class SimBackend:
             self.host_ram_used[h] += frag.ram_mb
             self.host_n_placed[h] += 1
             req = frag.request
+            if req.fault_t > 0.0:
+                # the crash-displaced request is running again: close the
+                # recovery arc at its first post-fault placement
+                self.recovery_latency.observe(max(self.t - req.fault_t, 0.0))
+                self.recovered += 1
+                req.fault_t = 0.0
+                tr.instant("recovery", track=SIM_TRACK, req=req.rid)
             if req.rid not in self._started:
                 self._started.add(req.rid)
                 if req.arrival_s is not None:
@@ -241,6 +310,8 @@ class SimBackend:
     # -------------------------------------------------------------- dynamics
     def step(self, policy) -> List[Outcome]:
         tr = get_tracer()
+        if self._injector is not None:
+            self._apply_faults()
         t0 = time.perf_counter()
         n_waiting = len(self.unplaced)
         with tr.span("place_frags", track=SIM_TRACK, waiting=n_waiting) as sp:
@@ -276,6 +347,11 @@ class SimBackend:
                 active_counts = np.bincount(hr, minlength=self.n_hosts)
                 share = np.minimum(1.0, CORES / active_counts[hr]) \
                     * self.host_speed[hr]
+                # injected stragglers: stalled hosts run at a fraction of
+                # their speed until the window closes
+                share = share * np.where(
+                    self.host_stall_until[hr] > self.t,
+                    self.host_stall_factor[hr], 1.0)
                 self.f_progress[idx] += self.dt * share
                 fin = self.f_progress[idx] >= self.f_work[idx]
                 if fin.any():
@@ -334,8 +410,18 @@ class SimBackend:
 
     # --------------------------------------------------------------- metrics
     def extra_metrics(self) -> dict:
-        return {
+        m = {
             "energy_wh": round(self.energy_wh, 2),
             "n_hosts": self.n_hosts,
             "place_time_s": self.place_time_s,
         }
+        if self._injector is not None:
+            m.update(self._injector.stats())
+            m["re_executions"] = self.re_executions
+            m["recovered"] = self.recovered
+            m["hosts_down"] = int((self.host_down_until > self.t).sum())
+            if self.recovery_latency.n:
+                for q in (50, 95, 99):
+                    m[f"recovery_latency_p{q}"] = round(
+                        self.recovery_latency.percentile(q), 6)
+        return m

@@ -72,6 +72,10 @@ class Request:
     ttft_s: float = 0.0                   # admission -> first generated token
     accuracy: float = 0.0
     output: Optional[np.ndarray] = None   # generated tokens (JaxBackend)
+    # backend-clock stamp of the last fault that disrupted this request
+    # (0.0 = undisturbed); the next successful (re)admission observes
+    # ``now - fault_t`` into the recovery-latency histogram and clears it
+    fault_t: float = 0.0
 
     @property
     def wid(self) -> int:
@@ -88,6 +92,12 @@ class Outcome:
     queue_wait_s: float
     accuracy: float
     finish_s: float           # backend-clock completion time
+    # graceful-degradation terminals: a shed request was dropped by
+    # deadline-aware load shedding (its deadline had already passed), a
+    # failed one exhausted its retry budget.  Neither produced tokens;
+    # EngineStats counts them separately and policies never observe them.
+    shed: bool = False
+    failed: bool = False
 
     # -- placement-policy feedback surface (A3C keys on these) -------------
     @property
@@ -154,6 +164,21 @@ class EngineStats:
     ship_latency_p50: float = 0.0
     ship_latency_p95: float = 0.0
     ship_latency_p99: float = 0.0
+    # fault-injection / recovery telemetry (repro.faults): injected fault
+    # count, dispatch retries, full re-executions (blackout spills, dropped
+    # shipments, crash-displaced fragments), recovered requests and the
+    # fault->re-admission latency percentiles — all mirrored from the
+    # backend's extra_metrics.  ``shed``/``failed`` count the engine-side
+    # graceful-degradation terminals (never part of ``completed``).
+    faults_injected: int = 0
+    retries: int = 0
+    re_executions: int = 0
+    recovered: int = 0
+    recovery_latency_p50: float = 0.0
+    recovery_latency_p95: float = 0.0
+    recovery_latency_p99: float = 0.0
+    shed: int = 0
+    failed: int = 0
     # streaming per-request latency distributions (repro.obs log-bucket
     # histograms): response time, queue wait, TTFT and TPOT (per-output-
     # token latency after the first).  Percentiles come out of these —
@@ -164,6 +189,12 @@ class EngineStats:
     tpot_hist: Histogram = field(default_factory=Histogram)
 
     def record(self, o: Outcome) -> None:
+        if o.shed or o.failed:
+            # degradation terminals: counted, never mixed into the
+            # completed-request latency/reward/accuracy distributions
+            self.shed += int(o.shed)
+            self.failed += int(o.failed)
+            return
         self.completed += 1
         self.violations += int(o.violated)
         name = MODE_NAMES.get(o.decision, str(o.decision))
@@ -200,7 +231,10 @@ class EngineStats:
 
     def summary(self) -> dict:
         n = max(self.completed, 1)
+        degraded = {"shed": self.shed, "failed": self.failed} \
+            if (self.shed or self.failed) else {}
         return {
+            **degraded,
             "completed": self.completed,
             "sla_violation": round(self.violations / n, 4),
             "accuracy": round(float(np.mean(self.accuracies)), 4)

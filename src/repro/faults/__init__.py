@@ -1,0 +1,37 @@
+"""repro.faults — deterministic, seeded fault injection for the serving
+fleet, plus the recovery bookkeeping that survives it.
+
+SplitPlace's premise is placement on *mobile edge* hosts — nodes that
+churn, stall and drop links (the journal follow-up, arXiv 2205.10635,
+evaluates under exactly that volatility).  This package gives every
+serving layer one shared failure model:
+
+  * :class:`FaultPlan`   — an immutable, seeded schedule of typed
+    :class:`Fault` events.  ``FaultPlan.generate(seed, ...)`` draws a
+    Poisson schedule deterministically; the same plan replays identically.
+  * :class:`FaultInjector` — consumes a plan against the owner's clock.
+    ``advance(now)`` fires due faults; charge-style faults (ship-wave
+    loss/dup/delay, transient dispatch errors) become pools the serving
+    hot paths drain via ``take_ship_fault`` / ``take_dispatch_error``.
+
+Clock semantics are owner-defined: ``SimBackend`` advances the injector on
+its simulated-seconds clock; ``JaxBackend`` advances it on its *scheduler
+step counter* so fault firing is bit-reproducible regardless of host wall
+clock — the property the chaos-parity suite keys on.
+
+Recovery is measured, not hoped for: consumers stamp ``Request.fault_t``
+when a fault disrupts a request and the next (re)admission observes
+``now - fault_t`` into a recovery-latency histogram, emitting
+``fault_injected`` / ``recovery`` instants through ``repro.obs`` so a
+faulted run renders the blackout -> re-admit arc in the Perfetto trace.
+"""
+from repro.faults.plan import (ARM_BLACKOUT, DISPATCH_ERROR, FAULT_KINDS,
+                               HOST_CRASH, HOST_STALL, SHIP_DELAY, SHIP_DROP,
+                               SHIP_DUP, Fault, FaultInjector, FaultPlan,
+                               TransientDispatchError)
+
+__all__ = [
+    "ARM_BLACKOUT", "DISPATCH_ERROR", "FAULT_KINDS", "HOST_CRASH",
+    "HOST_STALL", "SHIP_DELAY", "SHIP_DROP", "SHIP_DUP", "Fault",
+    "FaultInjector", "FaultPlan", "TransientDispatchError",
+]

@@ -74,6 +74,138 @@ def test_ledger_protocol():
     assert [s.lane.req.rid for s in buf.pop_expired(1.0)] == [9]
 
 
+def test_ledger_stale_attempt_marks():
+    """Regression (repeated-expiry interaction): a mark that arrives AFTER
+    its shipment expired and the request re-opened must be ignored — not
+    applied to the retry's fresh entry (whose receiver blocks may be a
+    reallocation of the same ids) and not tripping the unexpected-blocks
+    guard — while the retry's own marks still land."""
+    buf = RequestBlockBuffer()
+    shp0 = buf.open(_StubLane(7), [3, 4], 0, {3, 4}, deadline=1.0)
+    assert shp0.attempt == 0
+    assert [s.attempt for s in buf.pop_expired(1.0)] == [0]
+    # attempt counter survives expiry: the retry backs off from it
+    assert buf.peek_attempt(7) == 1
+    # re-open does NOT trip the duplicate-open guard and bumps the attempt
+    shp1 = buf.open(_StubLane(7), [5, 6], 0, {5, 6}, deadline=9.0)
+    assert shp1.attempt == 1
+    # the dead attempt's late mark: absorbed, even with foreign block ids
+    assert not buf.mark(7, [3, 4], attempt=0)
+    assert buf.stale_marks == 1 and not shp1.arrived
+    # duplicated replay of the same stale mark stays absorbed
+    assert not buf.mark(7, [3, 4], attempt=0)
+    assert buf.stale_marks == 2
+    # the live attempt's marks land; completion clears the attempt counter
+    assert buf.mark(7, [5, 6], attempt=1)
+    assert [s.attempt for s in buf.pop_ready()] == [1]
+    assert buf.peek_attempt(7) == 0
+    # a mark for a rid with nothing open is a silent no-op either way
+    assert not buf.mark(7, [5], attempt=1)
+    # current-attempt marks with truly foreign blocks still raise
+    buf.open(_StubLane(8), [1], 0, {1}, deadline=9.0)
+    with pytest.raises(ValueError, match="unexpected blocks"):
+        buf.mark(8, [2], attempt=0)
+
+
+class _FakeSched:
+    """Minimal scheduler stand-in for poll-seating tests: a real allocator,
+    a bounded seat count, and a scripted evict_latest."""
+
+    def __init__(self, role, *, free_lanes=0, victims=()):
+        self.role = role
+        self.block_size = 4
+        self.kv_dtype = "f32"
+        self.device = None
+        self.prefix_sharing = False
+        self.alloc = BlockAllocator(32, 4)
+        self.free_lanes = free_lanes
+        self.seated = []
+        self._victims = list(victims)
+        self.evictions = 0
+
+    def has_free_lane(self):
+        return len(self.seated) < self.free_lanes
+
+    def admit_shipped(self, lane, now):
+        self.seated.append(lane.req.rid)
+
+    def evict_latest(self, deadline, now):
+        self.evictions += 1
+        if self._victims:
+            self.free_lanes += 1
+            return self._victims.pop(0)
+        return None
+
+    def finish_shipped(self, lane):
+        pass
+
+
+class _ShipLane(_StubLane):
+    def __init__(self, rid, deadline):
+        super().__init__(rid, deadline)
+        self.blocks = []
+        self.n_shared = 0
+
+
+def _mk_store(dst):
+    return CacheStore(_FakeSched("prefill"), dst, timeout_s=5.0)
+
+
+def test_poll_seats_deadline_first_on_same_wave_ties():
+    """Arrivals completing in the SAME poll seat strictly by deadline, not
+    by ledger/marking order; equal deadlines seat in open order."""
+    dst = _FakeSched("decode", free_lanes=3)
+    store = _mk_store(dst)
+    # opened (and marked) in a deliberately deadline-inverted order, with a
+    # tie between rids 1 and 3
+    for rid, deadline in ((1, 5.0), (2, 1.0), (3, 5.0)):
+        ids = dst.alloc.alloc(2)
+        store.ledger.open(_ShipLane(rid, deadline), ids, 0, set(ids),
+                          deadline=100.0)
+        store.ledger.mark(rid, ids)
+    assert store.poll(now=0.0) == 3
+    assert dst.seated == [2, 1, 3]
+
+
+def test_poll_exactly_full_receiver_defers_then_seats():
+    """With the receiver's lanes exactly full and no strictly-later victim,
+    completed arrivals WAIT (nothing is dropped or double-seated); they seat
+    in deadline order as soon as capacity frees."""
+    dst = _FakeSched("decode", free_lanes=0)
+    store = _mk_store(dst)
+    for rid, deadline in ((1, 3.0), (2, 2.0)):
+        ids = dst.alloc.alloc(2)
+        store.ledger.open(_ShipLane(rid, deadline), ids, 0, set(ids),
+                          deadline=100.0)
+        store.ledger.mark(rid, ids)
+    assert store.poll(now=0.0) == 0        # full: arrivals parked, not lost
+    assert dst.evictions == 1              # eviction was considered ...
+    assert store.backlog == 2              # ... but nobody is less urgent
+    dst.free_lanes = 1
+    assert store.poll(now=0.0) == 1        # capacity frees: most urgent first
+    assert dst.seated == [2]
+    dst.free_lanes = 2
+    assert store.poll(now=0.0) == 1
+    assert dst.seated == [2, 1] and store.backlog == 0
+
+
+def test_poll_full_receiver_spills_later_deadline_lane():
+    """An arrival more urgent than a seated lane preempts it: the victim is
+    requeued (full re-execution) and the urgent arrival takes the seat."""
+    victim = _ShipLane(99, 50.0)
+    dst = _FakeSched("decode", free_lanes=0, victims=[victim])
+    requeued = []
+    store = CacheStore(_FakeSched("prefill"), dst, timeout_s=5.0,
+                       on_requeue=lambda lane: requeued.append(lane.req.rid))
+    ids = dst.alloc.alloc(2)
+    store.ledger.open(_ShipLane(1, 2.0), ids, 0, set(ids), deadline=100.0)
+    store.ledger.mark(1, ids)
+    assert store.poll(now=0.0) == 1
+    assert dst.seated == [1]
+    assert requeued == [99]
+    assert store.decode_spills == 1
+
+
 # ---------------------------------------------- ownership handoff property
 @settings(max_examples=20, deadline=None)
 @given(seed=st.integers(0, 10_000), src_blocks=st.integers(4, 24),
