@@ -9,6 +9,7 @@ warmup-delta counters.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
@@ -149,7 +150,9 @@ def run_mode(mode: str, trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
     walls = []
     tracer = old_tracer = None
     if trace_path is not None:
-        tracer = Tracer()
+        # streaming export: events hit the file as they happen (flat memory
+        # over arbitrary trace lengths); export_chrome_trace finalizes it
+        tracer = Tracer(stream_path=trace_path)
         old_tracer = set_tracer(tracer)
     try:
         for _ in range(reps):
@@ -230,6 +233,160 @@ def run_mode(mode: str, trace_fn, n_reqs: int, cfg, mesh, *, max_batch: int,
                   "ship_latency_p99"):
             if k in m:
                 out[k] = m[k]
+    return out
+
+
+def run_routed(trace_fn, n_reqs: int, cfg, mesh, *, n_replicas: int = 4,
+               max_batch: int, scan_tokens: int, cache_len: int = 112,
+               block_size: int = 8, num_blocks=None, seed: int = 0) -> dict:
+    """Fleet-routing comparison: drive the SAME seeded shared-prefix trace
+    through an ``n_replicas`` ``JaxBackend`` fleet three times — once routed
+    by the cache-status-synced ``PrefixAwareRouter`` and once each by the
+    cache-blind random / least-loaded baselines — and report fleet-wide
+    prefix-hit rate and response tails per policy.
+
+    Two warmup passes per policy (compile + steady-state cache population
+    under that policy's own routing), then one timed pass; hit-rate figures
+    are timed-pass deltas.  Each replica's block pool is deliberately too
+    small to cache every prompt family, so spreading a family across the
+    fleet (random) thrashes the LRU prefix caches that affinity routing
+    (prefix-aware) keeps warm."""
+    from repro.engine import (LAYER, FixedPolicy, PlacementEngine,
+                              PrefixAwareRouter)
+    from repro.engine.fleet import FleetBackend
+    from repro.sched.baselines import LeastLoadedPlacement, RandomPlacement
+
+    out = {"n_replicas": n_replicas, "n_reqs": n_reqs, "seed": seed}
+    for name in ("routed", "random", "least_loaded"):
+        fleet = FleetBackend(cfg, mesh, n_replicas=n_replicas,
+                             cache_len=cache_len, max_batch=max_batch,
+                             decode="paged", block_size=block_size,
+                             scan_tokens=scan_tokens, prefix_sharing=True,
+                             num_blocks=num_blocks)
+        placement = {
+            "routed": lambda: PrefixAwareRouter(fleet.board),
+            "random": lambda: RandomPlacement(seed),
+            "least_loaded": lambda: LeastLoadedPlacement(),
+        }[name]()
+        eng = PlacementEngine(FixedPolicy(LAYER, placement=placement), fleet)
+
+        def _pass():
+            waves, reqs = trace_fn(n_reqs, seed=seed)
+            t0 = time.perf_counter()
+            i = 0
+            for w in waves:
+                eng.submit(reqs[i:i + w])
+                i += w
+                eng.step()
+            eng.drain()
+            return time.perf_counter() - t0, reqs
+
+        _pass()
+        _pass()                              # steady-state cache population
+        warm = eng.summary()
+        wall, reqs = _pass()
+        m = eng.summary()
+
+        lat = [r.latency_s for r in reqs]
+        hit = m["prefix_hit_tokens"] - warm["prefix_hit_tokens"]
+        query = m["prefix_query_tokens"] - warm["prefix_query_tokens"]
+        row = {
+            "completed": m["completed"] - warm["completed"],
+            "rejections": n_reqs - (m["completed"] - warm["completed"]),
+            "wall_s": round(wall, 4),
+            "tokens_per_s": round(sum(r.max_new for r in reqs) / wall, 2),
+            "prefix_hit_rate": round(hit / max(query, 1), 4),
+            "sla_violation": round(float(np.mean(
+                [r.latency_s > r.sla_s for r in reqs])), 4),
+            "preemptions": m["preemptions"] - warm["preemptions"],
+            "routed_per_replica": m["routed_per_replica"],
+            "sync_deltas": m["sync_deltas"],
+        }
+        for q in (50, 95, 99):
+            row[f"response_p{q}"] = round(float(np.percentile(lat, q)), 4)
+        for k in ("route_expected_overlap", "tracked_hashes",
+                  "route_fallbacks"):
+            if k in m:
+                row[k] = m[k]
+        out[name] = row
+        print(f"fleet[{name}]: {json.dumps(row)}")
+    for base in ("random", "least_loaded"):
+        out[f"hit_rate_delta_vs_{base}"] = round(
+            out["routed"]["prefix_hit_rate"] - out[base]["prefix_hit_rate"],
+            4)
+        out[f"p99_delta_vs_{base}_s"] = round(
+            out[base]["response_p99"] - out["routed"]["response_p99"], 4)
+    return out
+
+
+def run_routed_sim(n_reqs: int, *, n_hosts: int = 32, n_families: int = 64,
+                   prefix_frac: float = 0.5, host_cache_slots: int = 4,
+                   seed: int = 0, dt: float = 0.1, wave: int = 256,
+                   max_pending: int = 768, learn: bool = False) -> dict:
+    """Million-request routing validation on the vectorized sim backend: the
+    SAME ``PrefixAwareRouter.route_arrays`` code path the real fleet runs,
+    scoring the sim's per-host prefix-family caches, vs the cache-blind
+    least-loaded fast path on an identical seeded request stream.
+
+    Requests are generated in bounded waves (admission waits for the
+    backlog to drain below ``max_pending``), so memory stays flat at any
+    ``n_reqs``; every request carries a ``prefix_family`` annotation and a
+    warm host saves ``prefix_frac`` of its work."""
+    from repro.engine import (COMPRESSED, FixedPolicy, PlacementEngine,
+                              PrefixAwareRouter, Request)
+    from repro.engine.sim_backend import SimBackend
+    from repro.sched.baselines import LeastLoadedPlacement
+
+    out = {"n_reqs": n_reqs, "n_hosts": n_hosts, "n_families": n_families,
+           "prefix_frac": prefix_frac, "seed": seed}
+    for name in ("routed", "least_loaded"):
+        placement = PrefixAwareRouter(learn=learn) if name == "routed" \
+            else LeastLoadedPlacement()
+        backend = SimBackend(n_hosts=n_hosts, dt=dt, seed=seed,
+                             host_cache_slots=host_cache_slots)
+        eng = PlacementEngine(FixedPolicy(COMPRESSED, placement=placement),
+                              backend)
+        rng = np.random.default_rng(seed)
+        lat = []
+        submitted = 0
+        t0 = time.perf_counter()
+        while submitted < n_reqs or backend.pending():
+            if submitted < n_reqs and not backend.unplaced \
+                    and backend.pending() < max_pending:
+                k = min(wave, n_reqs - submitted)
+                apps = rng.integers(0, 3, k)
+                fams = rng.integers(0, n_families, k)
+                slas = rng.uniform(20.0, 60.0, k)
+                eng.submit([Request(
+                    rid=submitted + j, app_id=int(apps[j]),
+                    sla_s=float(slas[j]), prefix_family=int(fams[j]),
+                    prefix_frac=prefix_frac) for j in range(k)])
+                submitted += k
+            for o in eng.step():
+                lat.append(o.latency_s)
+        wall = time.perf_counter() - t0
+        m = eng.summary()
+        row = {
+            "completed": len(lat),
+            "wall_s": round(wall, 2),
+            "reqs_per_s": round(len(lat) / wall, 1),
+            "sim_time_s": round(backend.t, 1),
+            "prefix_hit_rate": m.get("prefix_hit_rate", 0.0),
+            "mean_response_s": round(float(np.mean(lat)), 4),
+            "response_p99": round(float(np.percentile(lat, 99)), 4),
+            "sla_violation": m["sla_violation"],
+            "place_time_s": round(m.get("sched_time_s", 0.0), 2),
+        }
+        if hasattr(placement, "stats"):
+            row.update(placement.stats())
+        out[name] = row
+        print(f"sim[{name}]: {json.dumps(row)}")
+    out["hit_rate_delta"] = round(
+        out["routed"]["prefix_hit_rate"]
+        - out["least_loaded"]["prefix_hit_rate"], 4)
+    out["p99_delta_s"] = round(
+        out["least_loaded"]["response_p99"]
+        - out["routed"]["response_p99"], 4)
     return out
 
 

@@ -47,7 +47,8 @@ sys.path.insert(0, str(REPO / "src"))
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
 
 from _common import (build_mixed_trace, build_shared_trace,  # noqa: E402
-                     build_trace, run_chaos, run_mode)
+                     build_trace, run_chaos, run_mode, run_routed,
+                     run_routed_sim)
 
 
 def main(argv=None):
@@ -63,9 +64,15 @@ def main(argv=None):
     ap.add_argument("--fault-seed", type=int, default=9,
                     help="seed recorded on the chaos-run FaultPlan")
     ap.add_argument("--out", default=str(REPO / "BENCH_decode.json"))
+    ap.add_argument("--n-replicas", type=int, default=4,
+                    help="fleet size for the routed_vs_random comparison")
+    ap.add_argument("--sim-reqs", type=int, default=0,
+                    help="also validate the routing policy on SimBackend at "
+                         "this many simulated requests (routed_sim section)")
     ap.add_argument("--trace-out", default=None,
                     help="rerun the mixed disagg config with repro.obs "
-                         "tracing and write the Chrome trace JSON here")
+                         "tracing, streaming the Chrome trace JSON here "
+                         "incrementally")
     ap.add_argument("--profile-dir", default=None,
                     help="capture a jax.profiler device trace (jitted "
                          "dispatches labelled via TraceAnnotation) into "
@@ -250,6 +257,43 @@ def main(argv=None):
         print("WARNING: chaos survivors diverged from the clean twin")
     if ch["re_executions"] <= 0 and ch["retries"] <= 0:
         print("WARNING: chaos run exercised no recovery machinery")
+
+    # ---- fleet routing: prefix-aware vs random vs least-loaded ------------
+    # a shared-prefix trace with MORE families than one replica's block pool
+    # can cache: the cache-status-synced router keeps each family's head
+    # blocks warm on its affinity replica, the cache-blind baselines spread
+    # families fleet-wide and thrash every replica's LRU prefix cache.
+    # CI's routing-smoke job asserts this section (hit-rate delta > 0, zero
+    # rejections).
+    routed_trace = lambda n, seed=0: build_shared_trace(
+        n, seed, n_families=8, tail_max=4)
+    results["routed_vs_random"] = run_routed(
+        routed_trace, n_reqs, cfg, mesh, n_replicas=args.n_replicas,
+        max_batch=args.max_batch, scan_tokens=args.scan_tokens,
+        cache_len=112, num_blocks=1 + 56, seed=args.seed)
+    rv = results["routed_vs_random"]
+    print("routed_vs_random:", json.dumps({
+        k: v for k, v in rv.items() if not isinstance(v, dict)}))
+    if rv["hit_rate_delta_vs_random"] <= 0:
+        print("WARNING: prefix-aware routing did not beat random on fleet "
+              "hit rate")
+    if rv["hit_rate_delta_vs_least_loaded"] <= 0:
+        print("WARNING: prefix-aware routing did not beat least-loaded on "
+              "fleet hit rate")
+    if rv["p99_delta_vs_random_s"] <= 0:
+        print("WARNING: prefix-aware routing did not beat random on p99")
+    if any(rv[p]["rejections"] for p in ("routed", "random", "least_loaded")):
+        print("WARNING: fleet routing comparison dropped requests")
+
+    # ---- sim-scale routing validation: the same route_arrays path ---------
+    if args.sim_reqs:
+        results["routed_sim"] = run_routed_sim(args.sim_reqs, seed=args.seed)
+        rs = results["routed_sim"]
+        print("routed_sim:", json.dumps({
+            k: v for k, v in rs.items() if not isinstance(v, dict)}))
+        if rs["hit_rate_delta"] <= 0:
+            print("WARNING: sim routing did not beat least-loaded on "
+                  "hit rate")
 
     # ---- traced rerun: same disagg config with lifecycle tracing on -------
     # the trace must come ~free: every traced region is per dispatch, so

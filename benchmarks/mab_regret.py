@@ -57,12 +57,15 @@ def run(bandit: str, n: int, seed: int = 0, **kw):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=2000)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds both the workload stream and the bandits")
     args = ap.parse_args()
-    out = {}
+    out = {"seed": args.seed}
     for bandit, kw in [("ucb", {"c": 0.3}), ("thompson", {}),
                        ("egreedy", {"eps": 0.1})]:
-        regret, curve = run(bandit, args.n, **kw)
+        regret, curve = run(bandit, args.n, seed=args.seed, **kw)
         out[bandit] = {"total_regret": round(regret, 2), "curve": curve,
+                       "seed": args.seed,
                        "per_step_tail": round(
                            (curve[-1] - curve[-2]) / (args.n / 20), 4)}
         print(f"{bandit:10s} total regret {regret:8.2f}  "

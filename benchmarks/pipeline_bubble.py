@@ -40,8 +40,8 @@ def bench_config(tiny: bool):
     return cfg
 
 
-def make_batch(cfg, batch: int, seq: int):
-    rng = np.random.default_rng(0)
+def make_batch(cfg, batch: int, seq: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
     return {
         "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)),
                               jnp.int32),
@@ -72,6 +72,8 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=0)
     ap.add_argument("--n-microbatches", type=int, default=8)
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds the synthetic batch and the param init")
     ap.add_argument("--out", default="BENCH_pipeline.json")
     args = ap.parse_args(argv)
 
@@ -81,7 +83,7 @@ def main(argv=None):
     M = args.n_microbatches
     mesh = make_debug_mesh(1, 4)                   # 4 pipeline stages
     S = 4
-    batch = make_batch(cfg, batch_size, seq)
+    batch = make_batch(cfg, batch_size, seq, seed=args.seed)
 
     runners = {
         "fsdp": A.build_runner(cfg, "fsdp", mesh),
@@ -93,10 +95,11 @@ def main(argv=None):
         "1f1b": A.build_runner(cfg, "pipeline", mesh, n_microbatches=M,
                                schedule="1f1b"),
     }
-    params = runners["fsdp"].init(jax.random.PRNGKey(0))
+    params = runners["fsdp"].init(jax.random.PRNGKey(args.seed))
 
     results = {"config": cfg.name, "mesh": "1x4", "batch": batch_size,
-               "seq_len": seq, "n_microbatches": M, "runners": {}}
+               "seq_len": seq, "n_microbatches": M, "seed": args.seed,
+               "runners": {}}
     for name, runner in runners.items():
         row = time_step(runner, params, batch, repeats=args.repeats)
         if runner.mode == "pipeline":

@@ -27,7 +27,8 @@ the unchanged ``ExecutionBackend`` protocol.
 """
 from repro.decode.cache_store import (CacheStore, RequestBlockBuffer,
                                       Shipment)
-from repro.decode.paged_cache import (NULL_BLOCK, BlockAllocator, PrefixIndex,
+from repro.decode.paged_cache import (NULL_BLOCK, ROOT_HASH, BlockAllocator,
+                                      PrefixIndex, chain_hashes,
                                       chunk_write_slots, copy_blocks,
                                       gather_blocks, int8_kv_capacity_ratio,
                                       pool_block_bytes, quantize_kv,
@@ -40,8 +41,9 @@ from repro.decode.paged_model import (make_decode_fn, make_prefill_chunk_fn,
 from repro.decode.scheduler import Lane, PagedArmScheduler
 
 __all__ = [
-    "NULL_BLOCK", "BlockAllocator", "CacheStore", "Lane", "PagedArmScheduler",
-    "PrefixIndex", "RequestBlockBuffer", "Shipment", "chunk_write_slots",
+    "NULL_BLOCK", "ROOT_HASH", "BlockAllocator", "CacheStore", "Lane",
+    "PagedArmScheduler", "PrefixIndex", "RequestBlockBuffer", "Shipment",
+    "chain_hashes", "chunk_write_slots",
     "copy_blocks", "gather_blocks", "int8_kv_capacity_ratio",
     "make_decode_fn", "make_prefill_chunk_fn", "paged_decode_logits",
     "pool_block_bytes", "quantize_attn_params", "quantize_kv",

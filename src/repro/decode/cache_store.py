@@ -240,6 +240,12 @@ class CacheStore:
         self.ship_failed = 0               # retry budget exhausted
         self.decode_spills = 0             # backpressure lane evictions
         self.delayed_marks = 0             # injected-delay marks staged
+        # ship/decode overlap accounting (async dispatch): host seconds of
+        # ship+poll work done while the decode scan was in flight (hidden)
+        # vs seconds spent blocked reading the scan's results (exposed)
+        self.overlap_hidden_s = 0.0
+        self.overlap_exposed_s = 0.0
+        self.overlap_steps = 0
         self.compile_stats: Dict[str, int] = {}
         # open-shipment -> seated-arrival latency (merged up by the backend)
         self.ship_latency = Histogram()
@@ -563,6 +569,13 @@ class CacheStore:
         self.src.pool = jax.tree_util.tree_map(shard_for(self.src.device), out)
         self.dst.pool = jax.tree_util.tree_map(shard_for(self.dst.device), out)
 
+    def note_overlap(self, hidden_s: float, exposed_s: float) -> None:
+        """Record one disagg step's ship/decode overlap split (driver calls
+        this after finishing an async decode dispatch)."""
+        self.overlap_hidden_s += hidden_s
+        self.overlap_exposed_s += exposed_s
+        self.overlap_steps += 1
+
     # ------------------------------------------------------------ metrics
     def stats(self) -> dict:
         return {
@@ -579,5 +592,8 @@ class CacheStore:
             "ship_delayed_marks": self.delayed_marks,
             "decode_spills": self.decode_spills,
             "ship_in_flight": len(self.ledger),
+            "overlap_hidden_s": round(self.overlap_hidden_s, 6),
+            "overlap_exposed_s": round(self.overlap_exposed_s, 6),
+            "overlap_steps": self.overlap_steps,
             **{f"compile_{k}": v for k, v in self.compile_stats.items()},
         }

@@ -45,6 +45,25 @@ import jax.numpy as jnp
 #: reserved physical block id — scratch target for padded/inactive writes
 NULL_BLOCK = 0
 
+#: chain-hash of the empty prefix (the root parent of every chain)
+ROOT_HASH = 0
+
+
+def chain_hashes(tokens, block_size: int) -> List[int]:
+    """Block-hash chain of a token sequence — the cache-status sync wire
+    format.  ``h_j = hash((h_{j-1},) + chunk_j)`` over complete
+    ``block_size`` chunks, rooted at :data:`ROOT_HASH`.  Integer-tuple
+    hashing is PYTHONHASHSEED-independent, so producer (PrefixIndex delta
+    stream) and consumer (the placement layer's replica index) agree without
+    shipping raw tokens."""
+    toks = [int(t) for t in tokens]
+    out: List[int] = []
+    h = ROOT_HASH
+    for j in range(len(toks) // block_size):
+        h = hash((h,) + tuple(toks[j * block_size:(j + 1) * block_size]))
+        out.append(h)
+    return out
+
 
 class BlockAllocator:
     """Refcounted free-list allocator over the physical block pool of one arm.
@@ -179,6 +198,25 @@ class PrefixIndex:
         self.block_size = block_size
         # parent key -> {chunk tuple -> physical block}
         self._children: Dict[object, Dict[Tuple[int, ...], int]] = {}
+        # exact key -> chain hash, mirrored for the cache-status delta
+        # stream: ``on_delta("add"|"drop", chain_hash)`` fires on every
+        # registration / reclaim so the placement layer can keep a global
+        # block-hash -> replica index without ever snapshotting the index.
+        self._hashes: Dict[object, int] = {}
+        self.on_delta = None  # type: Optional[callable]
+
+    def _chain_hash(self, key: object) -> int:
+        """Chain hash of a nested-tuple key — a pure function of the key
+        (``chain_hashes`` on the flattened tokens gives the same value), so
+        it can be recomputed even after a parent entry was dropped."""
+        if key is None:
+            return ROOT_HASH
+        h = self._hashes.get(key)
+        if h is None:
+            parent, chunk = key
+            h = hash((self._chain_hash(parent),) + chunk)
+            self._hashes[key] = h
+        return h
 
     def __len__(self) -> int:
         return sum(len(c) for c in self._children.values())
@@ -270,6 +308,8 @@ class PrefixIndex:
                 kids[chunk] = block_ids[j]
                 alloc.register(block_ids[j], key)
                 added += 1
+                if self.on_delta is not None:
+                    self.on_delta("add", self._chain_hash(key))
             parent = key
         return added
 
@@ -277,10 +317,13 @@ class PrefixIndex:
         """Forget one mapping (its block is being reclaimed)."""
         parent, chunk = key
         kids = self._children.get(parent)
-        if kids is not None:
-            kids.pop(chunk, None)
+        if kids is not None and chunk in kids:
+            del kids[chunk]
             if not kids:
                 del self._children[parent]
+            if self.on_delta is not None:
+                self.on_delta("drop", self._chain_hash(key))
+        self._hashes.pop(key, None)
 
 
 def quantize_kv(x):

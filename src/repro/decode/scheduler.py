@@ -103,7 +103,8 @@ class PagedArmScheduler:
                  prefill_chunk: int = 32, prefix_sharing: bool = True,
                  watermark: float = 0.0, interpret: bool = False,
                  kv_dtype: str = "f32", weight_quant: Optional[str] = None,
-                 role: str = "colocated", device=None, clock=None):
+                 role: str = "colocated", device=None, clock=None,
+                 jit_cache: Optional[dict] = None):
         if not supports_paged_decode(model):
             raise ValueError("model does not support paged decode "
                              "(needs pure global-attention mixers)")
@@ -174,7 +175,13 @@ class PagedArmScheduler:
         self._rseq = 0
         self._ready: List[Lane] = []  # prefill role: detached, ship-ready
 
-        self._jitted: Dict[tuple, object] = {}
+        # compiled-program cache, keyed (kind,) + shape bucket.  A fleet of
+        # replicas serving the SAME arm passes one shared dict so each
+        # bucket compiles once fleet-wide (programs are pure functions of
+        # params/pool shapes, which replicas of an arm share); distinct
+        # arms must never share one (different models).
+        self._jitted: Dict[tuple, object] = \
+            jit_cache if jit_cache is not None else {}
 
         # instrumentation
         self.join_waves = 0
@@ -676,11 +683,28 @@ class PagedArmScheduler:
         cost nothing) and the scan length buckets to the largest remaining
         budget — both bounded compile keys, both counted in
         ``compile_stats``.
+
+        Split into ``dispatch_async`` (enqueue the jitted scan, return
+        immediately with device futures) + ``finish_dispatch`` (block on the
+        results, retire) so a disagg driver can hide the ship wave behind
+        the running scan.
         """
+        return self.finish_dispatch(self.dispatch_async(now), now)
+
+    def dispatch_async(self, now: float) -> Optional[dict]:
+        """Enqueue one fused scan decode and return WITHOUT reading any
+        result off the device.  The returned pending record holds the
+        output futures plus enough host state to retire lanes later; pass
+        it to ``finish_dispatch``.  Returns None when no lane is decoding.
+
+        ``self.pool`` is rebound to the scan's output future right away, so
+        work enqueued between the two halves (e.g. a cache-store ship wave)
+        consumes the post-scan pool — device programs serialize per queue,
+        which is exactly what makes the overlap safe."""
         act = np.nonzero(self.remaining > 0)[0]
         n_act = len(act)
         if n_act == 0:
-            return []
+            return None
         w = next_pow2(n_act)
         k_eff = self._scan_bucket(self.remaining[act])
         fn = self._get_jitted(
@@ -699,25 +723,53 @@ class PagedArmScheduler:
         tok[:n_act] = self.last_tok[act]
         old_remaining = remaining.copy()
 
-        tr = get_tracer()
-        with tr.span("decode_scan", track=self.track, lanes=n_act,
-                     scan=k_eff), annotation(f"decode:{w}x{k_eff}"):
+        with get_tracer().span("decode_scan", track=self.track, lanes=n_act,
+                               scan=k_eff), annotation(f"decode:{w}x{k_eff}"):
             self.pool, tok_o, lengths_o, remaining_o, toks = fn(
                 self.params, self.pool, jnp.asarray(tok[:, None]),
                 jnp.asarray(bt), jnp.asarray(lengths),
                 jnp.asarray(remaining))
-            toks = np.asarray(toks)
-        self.last_tok[act] = np.asarray(tok_o)[:n_act, 0]
-        self.lengths[act] = np.asarray(lengths_o)[:n_act]
-        self.remaining[act] = np.asarray(remaining_o)[:n_act]
-
         self.decode_dispatches += 1
         self.lane_steps += w * k_eff
         self._active_frac_sum += n_act / w
+        return {
+            "act": act, "n_act": n_act, "k_eff": k_eff,
+            "old_remaining": old_remaining,
+            # lane identity per active row: a row only writes back if its
+            # slot still holds the SAME lane (evict_latest can free a slot
+            # — and admit_shipped can re-seat it — while the scan runs)
+            "lanes": [self.lanes[i] for i in act],
+            "tok_o": tok_o, "lengths_o": lengths_o,
+            "remaining_o": remaining_o, "toks": toks,
+        }
 
+    def finish_dispatch(self, pending: Optional[dict],
+                        now: float) -> List[Lane]:
+        """Block on a ``dispatch_async`` record's device results, write back
+        lane state and retire finished lanes."""
+        if pending is None:
+            return []
+        act, n_act = pending["act"], pending["n_act"]
+        k_eff = pending["k_eff"]
+        old_remaining = pending["old_remaining"]
+        toks = np.asarray(pending["toks"])
+        tok_o = np.asarray(pending["tok_o"])
+        lengths_o = np.asarray(pending["lengths_o"])
+        remaining_o = np.asarray(pending["remaining_o"])
+
+        tr = get_tracer()
         retired: List[Lane] = []
         for row, i in enumerate(act):
-            lane = self.lanes[i]
+            lane = pending["lanes"][row]
+            if self.lanes[i] is not lane:
+                # evicted mid-flight (ship backpressure): its tokens are
+                # discarded — the lane re-executes from prefill, and any
+                # stale device writes to its reallocated blocks were
+                # overwritten by later-enqueued work
+                continue
+            self.last_tok[i] = tok_o[row, 0]
+            self.lengths[i] = lengths_o[row]
+            self.remaining[i] = remaining_o[row]
             n_take = min(int(old_remaining[row]), k_eff)
             lane.out.extend(int(t) for t in toks[row, :n_take])
             self.decoded_tokens += n_take

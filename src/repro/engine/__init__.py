@@ -10,15 +10,19 @@ from repro.engine.arrivals import PoissonSource, TraceSource
 from repro.engine.core import ExecutionBackend, PlacementEngine
 from repro.engine.policy import (CompressionPolicy, FixedPolicy, MABPolicy,
                                  Policy)
+from repro.engine.routing import (CacheStatusBoard, PrefixAwareRouter,
+                                  RequestFragment)
 from repro.engine.types import (APPS, COMPRESSED, LAYER, MODE_NAMES, SEMANTIC,
                                 EngineStats, Outcome, Request, accuracy_for,
                                 reward_for)
 
 __all__ = [
     "APPS", "COMPRESSED", "LAYER", "MODE_NAMES", "SEMANTIC",
-    "CompressionPolicy", "EngineStats", "ExecutionBackend", "FixedPolicy",
-    "MABPolicy", "Outcome", "PlacementEngine", "PoissonSource", "Policy",
-    "Request", "TraceSource", "accuracy_for", "reward_for",
+    "CacheStatusBoard", "CompressionPolicy", "EngineStats",
+    "ExecutionBackend", "FixedPolicy", "MABPolicy", "Outcome",
+    "PlacementEngine", "PoissonSource", "Policy", "PrefixAwareRouter",
+    "Request", "RequestFragment", "TraceSource", "accuracy_for",
+    "reward_for",
 ]
 
 
@@ -31,4 +35,10 @@ def __getattr__(name):
     if name == "JaxBackend":
         from repro.engine.jax_backend import JaxBackend
         return JaxBackend
+    if name == "FleetBackend":
+        from repro.engine.fleet import FleetBackend
+        return FleetBackend
+    if name == "ReplicaView":
+        from repro.engine.fleet import ReplicaView
+        return ReplicaView
     raise AttributeError(name)

@@ -127,7 +127,8 @@ class PlacementEngine:
                   "ttft_s", "ship_latency_p50", "ship_latency_p95",
                   "ship_latency_p99", "faults_injected", "retries",
                   "re_executions", "recovered", "recovery_latency_p50",
-                  "recovery_latency_p95", "recovery_latency_p99"):
+                  "recovery_latency_p95", "recovery_latency_p99",
+                  "routed", "route_expected_overlap", "sync_deltas"):
             if f in extra:
                 setattr(self.stats, f, extra[f])
         sched = self.decide_time_s + extra.pop("place_time_s", 0.0)

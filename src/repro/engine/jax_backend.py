@@ -58,7 +58,8 @@ class JaxBackend:
                  ship_timeout_s: float = 30.0, faults=None,
                  max_retries: int = 3, breaker_cooldown: int = 8,
                  max_ship_retries: Optional[int] = None,
-                 load_shed: bool = False):
+                 load_shed: bool = False,
+                 jit_cache: Optional[dict] = None):
         if decode not in ("auto", "paged", "legacy"):
             raise ValueError(f"decode={decode!r}; expected auto|paged|legacy")
         if fleet not in (None, "disagg"):
@@ -106,6 +107,11 @@ class JaxBackend:
         # fleet device pool, consumed (prefill_dev, decode_dev) per arm in
         # _ensure_arm order; an exhausted pool colocates on one device
         self._fleet_pool = list(fleet_devices) if fleet_devices else []
+        # fleet-shared compiled-program cache: {arm -> scheduler jit dict}.
+        # Replicas of the same backend config pass ONE dict here so each
+        # (arm, bucket) compiles once across the whole fleet; the per-arm
+        # split is mandatory — different arms run different models.
+        self._jit_cache = jit_cache
         self._init_key = jax.random.PRNGKey(seed + 1)
         self.runners: Dict[int, object] = {}
         self.params: Dict[int, object] = {}
@@ -165,6 +171,8 @@ class JaxBackend:
                       watermark=self.watermark, kv_dtype=self.kv_dtype,
                       weight_quant=self.weight_quant,
                       clock=lambda: self.now)
+            if self._jit_cache is not None:
+                kw["jit_cache"] = self._jit_cache.setdefault(arm, {})
             if self.fleet == "disagg":
                 from repro.decode.cache_store import CacheStore
                 pf_dev = dc_dev = None
@@ -432,11 +440,24 @@ class JaxBackend:
         # from the chunk logits, nothing needs shipping
         outcomes = [self._lane_outcome(lane, arm, prefill_finish)
                     for lane in done]
+        # overlap the ship wave with the decode scan: enqueue the jitted
+        # scan first (async — no result reads), do the ship + poll host
+        # work while it runs on the device, then block on the scan results.
+        # Enqueue order makes this safe: a lane evicted by ship
+        # backpressure mid-scan has its reallocated blocks rewritten by the
+        # later-enqueued ship scatter, and finish_dispatch skips its rows.
+        pending = dc.dispatch_async(self.now) \
+            if self._dispatch_ok(arm, "decode") else None
+        t0 = self.now
         store.ship(pf.take_ready(), self.now)
         store.poll(self.now)
-        retired = dc.dispatch(self.now) \
-            if self._dispatch_ok(arm, "decode") else []
+        t1 = self.now
+        retired = dc.finish_dispatch(pending, self.now)
         finish = self.now
+        if pending is not None:
+            # hidden: ship/poll host work done while the scan was in
+            # flight; exposed: the blocking read of the scan's results
+            store.note_overlap(t1 - t0, finish - t1)
         outcomes += [self._lane_outcome(lane, arm, finish)
                      for lane in retired]
         return outcomes
@@ -566,6 +587,12 @@ class JaxBackend:
         if self._disagg:
             stores = [st for _, _, st in self._disagg.values()]
             m.update(merge_stat_dicts(s.stats() for s in stores))
+            hid = m.get("overlap_hidden_s", 0.0)
+            exp = m.get("overlap_exposed_s", 0.0)
+            if hid + exp > 0:
+                # fraction of ship+decode host time hidden behind the
+                # in-flight decode scan (async dispatch overlap)
+                m["ship_overlap_frac"] = round(hid / (hid + exp), 4)
             ship = Histogram()
             for s in stores:
                 ship.merge(s.ship_latency)

@@ -111,7 +111,8 @@ class SimBackend:
     """Vectorized discrete-event execution backend over an edge testbed."""
 
     def __init__(self, *, n_hosts: int = 10, dt: float = 0.1, seed: int = 0,
-                 network_kw: Optional[dict] = None, faults=None):
+                 network_kw: Optional[dict] = None, faults=None,
+                 host_cache_slots: int = 8):
         rng = np.random.default_rng(seed)
         self.n_hosts = n_hosts
         self.dt = dt
@@ -139,6 +140,7 @@ class SimBackend:
         self.f_dep_left = np.zeros(cap, np.int64)
         self.f_done = np.zeros(cap, bool)
         self.f_done_at = np.zeros(cap)
+        self.f_prefix_done = np.zeros(cap, bool)   # hit model applied once
         # python-side metadata (in-flight only; completed entries are freed)
         self.fragments: Dict[int, Fragment] = {}
         self._live_fids: Dict[int, None] = {}  # in-flight fids, fid order
@@ -148,6 +150,16 @@ class SimBackend:
         self._requests: Dict[int, Request] = {}
         self._started: set = set()
         self.unplaced: List[int] = []
+        # per-host prefix-hit model: each host keeps an MRU cache of the
+        # last ``host_cache_slots`` prefix FAMILIES it served (the sim
+        # analogue of a decode worker's PrefixIndex).  A request landing on
+        # a host that still caches its family saves ``prefix_frac`` of its
+        # head fragment's work — so the same prefix-aware routing policy
+        # that steers the real fleet pays off here too, at any host count.
+        self.host_cache_slots = host_cache_slots
+        self.host_family = np.full((n_hosts, host_cache_slots), -1, np.int64)
+        self.prefix_hits = 0
+        self.prefix_queries = 0
         # metrics
         self.energy_wh = 0.0
         self.place_time_s = 0.0
@@ -178,7 +190,8 @@ class SimBackend:
             return
         new = max(2 * cap, need)
         for name in ("f_work", "f_progress", "f_ready_at", "f_ram",
-                     "f_host", "f_dep_left", "f_done", "f_done_at"):
+                     "f_host", "f_dep_left", "f_done", "f_done_at",
+                     "f_prefix_done"):
             old = getattr(self, name)
             arr = np.zeros(new, old.dtype)
             if name == "f_host":
@@ -259,19 +272,49 @@ class SimBackend:
         tr.instant("fault_injected", track=SIM_TRACK, kind=HOST_CRASH,
                    host=h, displaced=displaced)
 
+    # ---------------------------------------------------- prefix-hit model
+    def _prefix_touch(self, h: int, fam: int) -> bool:
+        """MRU-touch family ``fam`` in host ``h``'s cache; True on hit."""
+        row = self.host_family[h]
+        pos = np.nonzero(row == fam)[0]
+        hit = pos.size > 0
+        # move-to-front (evicting the LRU slot on a miss)
+        keep = int(pos[0]) if hit else len(row) - 1
+        row[1:keep + 1] = row[:keep]
+        row[0] = fam
+        return hit
+
     # ------------------------------------------------------------- placement
     def _place(self, policy) -> None:
-        # vectorized fast-path: placement policies exposing array scoring
-        # (e.g. LeastLoadedPlacement.place_arrays) skip the per-host views
-        fast = getattr(getattr(policy, "placement", None),
-                       "place_arrays", None)
+        # vectorized fast-paths: a routing placement exposing the shared
+        # ``route_arrays`` scoring (PrefixAwareRouter — THE same code path
+        # the real fleet runs) beats the plain ``place_arrays`` fast path
+        # (e.g. LeastLoadedPlacement); either skips the per-host views
+        placement = getattr(policy, "placement", None)
+        route = getattr(placement, "route_arrays", None)
+        fast = getattr(placement, "place_arrays", None)
         tr = get_tracer()
         # crashed hosts advertise no capacity until their window closes
         host_up = self.host_down_until <= self.t
         still = []
         for fid in self.unplaced:
             frag = self.fragments[fid]
-            if fast is not None:
+            req = frag.request
+            if route is not None:
+                free = self.host_ram_mb - self.host_ram_used
+                fam = req.prefix_family
+                overlap = (self.host_family == fam).any(axis=1) \
+                    * req.prefix_frac if fam >= 0 \
+                    else np.zeros(self.n_hosts)
+                arrival = req.arrival_s if req.arrival_s is not None \
+                    else self.t
+                h = route(overlap_frac=overlap,
+                          queue_depth=self.host_n_placed,
+                          free_frac=free / self.host_ram_mb,
+                          slack_s=req.sla_s - (self.t - arrival),
+                          feasible=host_up & (free >= frag.ram_mb),
+                          wid=req.rid)
+            elif fast is not None:
                 free = np.where(host_up,
                                 self.host_ram_mb - self.host_ram_used, -1.0)
                 h = fast(frag.ram_mb, free, self.host_n_placed,
@@ -286,7 +329,16 @@ class SimBackend:
             self.f_host[fid] = h
             self.host_ram_used[h] += frag.ram_mb
             self.host_n_placed[h] += 1
-            req = frag.request
+            if frag.frag_index == 0 and req.prefix_family >= 0 \
+                    and not self.f_prefix_done[fid]:
+                # the head fragment carries the prompt: a warm host saves
+                # prefix_frac of its work.  Applied once per fragment —
+                # crash displacement re-places but never re-discounts.
+                self.f_prefix_done[fid] = True
+                self.prefix_queries += 1
+                if self._prefix_touch(h, req.prefix_family):
+                    self.prefix_hits += 1
+                    self.f_work[fid] *= (1.0 - req.prefix_frac)
             if req.fault_t > 0.0:
                 # the crash-displaced request is running again: close the
                 # recovery arc at its first post-fault placement
@@ -415,6 +467,11 @@ class SimBackend:
             "n_hosts": self.n_hosts,
             "place_time_s": self.place_time_s,
         }
+        if self.prefix_queries:
+            m["prefix_hit_tokens"] = self.prefix_hits
+            m["prefix_query_tokens"] = self.prefix_queries
+            m["prefix_hit_rate"] = round(
+                self.prefix_hits / self.prefix_queries, 4)
         if self._injector is not None:
             m.update(self._injector.stats())
             m["re_executions"] = self.re_executions

@@ -76,6 +76,12 @@ class Request:
     # (0.0 = undisturbed); the next successful (re)admission observes
     # ``now - fault_t`` into the recovery-latency histogram and clears it
     fault_t: float = 0.0
+    # shared-prefix trace annotations for SimBackend's per-host prefix-hit
+    # model (JaxBackend derives both from the real tokens instead):
+    # requests of the same family share a prompt head covering
+    # ``prefix_frac`` of the work a cache hit would save
+    prefix_family: int = -1
+    prefix_frac: float = 0.0
 
     @property
     def wid(self) -> int:
@@ -179,6 +185,13 @@ class EngineStats:
     recovery_latency_p99: float = 0.0
     shed: int = 0
     failed: int = 0
+    # fleet-routing telemetry (cache-status sync): requests routed through
+    # the placement layer, the mean cached-prefix overlap the router
+    # expected at its chosen replicas, and the add/drop delta messages the
+    # board consumed (the incremental sync's wire traffic)
+    routed: int = 0
+    route_expected_overlap: float = 0.0
+    sync_deltas: int = 0
     # streaming per-request latency distributions (repro.obs log-bucket
     # histograms): response time, queue wait, TTFT and TPOT (per-output-
     # token latency after the first).  Percentiles come out of these —

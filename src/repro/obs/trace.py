@@ -103,8 +103,8 @@ class _Span:
         tr = self._tr
         t1 = tr._now()
         tr._stack.pop()
-        tr._events.append(("X", self.name, self.track, self.t0,
-                           t1 - self.t0, self.args))
+        tr._record(("X", self.name, self.track, self.t0,
+                    t1 - self.t0, self.args))
         return False
 
 
@@ -115,17 +115,55 @@ class Tracer:
     per span/instant); timestamps come from ``clock`` (default
     ``time.perf_counter``) rebased to the tracer's construction so traces
     start near zero.
+
+    With ``stream_path`` set, events are converted and written to the file
+    INCREMENTALLY instead of buffered — memory stays flat over arbitrarily
+    long soak runs.  Call :meth:`close` (or let ``trace_to`` do it) to
+    finalize the JSON; ``events()`` returns nothing in streaming mode (the
+    log went to disk), while ``n_events`` still counts.
     """
 
     enabled = True
 
-    def __init__(self, *, clock=time.perf_counter):
+    def __init__(self, *, clock=time.perf_counter,
+                 stream_path: Optional[str] = None):
         self._clock = clock
         self._t0 = clock()
         # (ph, name, track, ts_us, dur_us, args) tuples
         self._events: List[tuple] = []
         self._stack: List[_Span] = []
         self._counters: Dict[tuple, float] = {}
+        self.stream_path = stream_path
+        self._n_streamed = 0
+        self._stream = None
+        self._stream_first = True
+        self._pids: Dict[str, int] = {}
+        self._tids: Dict[tuple, int] = {}
+        if stream_path is not None:
+            self._stream = open(stream_path, "w")
+            self._stream.write('{"displayTimeUnit": "ms", "traceEvents": [')
+
+    def _record(self, ev: tuple) -> None:
+        if self._stream is None:
+            self._events.append(ev)
+            return
+        self._n_streamed += 1
+        for d in self._chrome_dicts(ev):
+            self._stream.write(("" if self._stream_first else ",\n")
+                               + json.dumps(d))
+            self._stream_first = False
+        # per-record flush: a soak run killed mid-flight still leaves an
+        # inspectable trace (append "]}" by hand); events are per dispatch,
+        # so the syscall never sits on a per-token path
+        self._stream.flush()
+
+    def close(self) -> Optional[str]:
+        """Finalize a streaming trace (idempotent); returns its path."""
+        if self._stream is not None:
+            self._stream.write("]}")
+            self._stream.close()
+            self._stream = None
+        return self.stream_path
 
     # ------------------------------------------------------------ recording
     def _now(self) -> float:
@@ -144,7 +182,7 @@ class Tracer:
         track when ``track`` is None."""
         if track is None:
             track = self._current_track()
-        self._events.append(("i", name, track, self._now(), 0.0, attrs))
+        self._record(("i", name, track, self._now(), 0.0, attrs))
 
     def count(self, name: str, value: float = 1, *,
               track: Optional[Track] = None):
@@ -155,12 +193,11 @@ class Tracer:
         key = (name, _track_pair(track)[0])
         total = self._counters.get(key, 0) + value
         self._counters[key] = total
-        self._events.append(("C", name, track, self._now(), 0.0,
-                             {name: total}))
+        self._record(("C", name, track, self._now(), 0.0, {name: total}))
 
     @property
     def n_events(self) -> int:
-        return len(self._events)
+        return len(self._events) + self._n_streamed
 
     def events(self, name: Optional[str] = None) -> List[tuple]:
         """Raw event tuples ``(ph, name, track, ts_us, dur_us, args)`` —
@@ -170,35 +207,48 @@ class Tracer:
         return [e for e in self._events if e[1] == name]
 
     # -------------------------------------------------------------- export
+    def _chrome_dicts(self, event: tuple) -> List[dict]:
+        """Convert one raw event tuple to its Chrome trace dicts — the
+        event itself, preceded by ``M`` metadata events the first time a
+        track's process/thread labels are seen."""
+        ph, name, track, ts, dur, args = event
+        out: List[dict] = []
+        proc, thread = _track_pair(track)
+        if proc not in self._pids:
+            self._pids[proc] = len(self._pids) + 1
+            out.append({"name": "process_name", "ph": "M",
+                        "pid": self._pids[proc], "tid": 0,
+                        "args": {"name": proc}})
+        pid = self._pids[proc]
+        tkey = (pid, thread)
+        if tkey not in self._tids:
+            self._tids[tkey] = sum(1 for (p, _t) in self._tids
+                                   if p == pid) + 1
+            out.append({"name": "thread_name", "ph": "M", "pid": pid,
+                        "tid": self._tids[tkey], "args": {"name": thread}})
+        ev = {"name": name, "ph": ph, "ts": round(ts, 3), "pid": pid,
+              "tid": self._tids[tkey], "cat": "repro"}
+        if ph == "X":
+            ev["dur"] = round(dur, 3)
+        elif ph == "i":
+            ev["s"] = "t"              # thread-scoped instant
+        if args:
+            ev["args"] = {k: _jsonable(v) for k, v in args.items()}
+        out.append(ev)
+        return out
+
     def export_chrome_trace(self, path: str) -> str:
         """Write Chrome/Perfetto trace-event JSON.  Track ``(process,
         thread)`` labels map to stable integer ``pid``/``tid`` in
-        first-seen order, with ``M`` metadata events naming them."""
-        pids: Dict[str, int] = {}
-        tids: Dict[tuple, int] = {}
+        first-seen order, with ``M`` metadata events naming them.  A
+        streaming tracer already wrote its events — this finalizes the
+        stream file instead (``path`` is ignored)."""
+        if self.stream_path is not None:
+            return self.close()
+        self._pids, self._tids = {}, {}     # repeat exports stay complete
         out: List[dict] = []
-        for ph, name, track, ts, dur, args in self._events:
-            proc, thread = _track_pair(track)
-            if proc not in pids:
-                pids[proc] = len(pids) + 1
-                out.append({"name": "process_name", "ph": "M",
-                            "pid": pids[proc], "tid": 0,
-                            "args": {"name": proc}})
-            pid = pids[proc]
-            tkey = (pid, thread)
-            if tkey not in tids:
-                tids[tkey] = sum(1 for (p, _t) in tids if p == pid) + 1
-                out.append({"name": "thread_name", "ph": "M", "pid": pid,
-                            "tid": tids[tkey], "args": {"name": thread}})
-            ev = {"name": name, "ph": ph, "ts": round(ts, 3), "pid": pid,
-                  "tid": tids[tkey], "cat": "repro"}
-            if ph == "X":
-                ev["dur"] = round(dur, 3)
-            elif ph == "i":
-                ev["s"] = "t"          # thread-scoped instant
-            if args:
-                ev["args"] = {k: _jsonable(v) for k, v in args.items()}
-            out.append(ev)
+        for event in self._events:
+            out.extend(self._chrome_dicts(event))
         with open(path, "w") as f:
             json.dump({"traceEvents": out, "displayTimeUnit": "ms"}, f)
         return path
@@ -249,10 +299,14 @@ def set_tracer(tracer) -> object:
 class trace_to:
     """``with trace_to("trace.json") as tr: ...`` — install a fresh Tracer,
     run the workload, export the Chrome trace on exit (even on error) and
-    restore the previous tracer."""
+    restore the previous tracer.  ``stream=True`` writes events to the file
+    incrementally as they happen (flat memory for long soak runs) and
+    finalizes the JSON on exit."""
 
-    def __init__(self, path: str, **tracer_kw):
+    def __init__(self, path: str, *, stream: bool = False, **tracer_kw):
         self.path = path
+        if stream:
+            tracer_kw.setdefault("stream_path", path)
         self.tracer = Tracer(**tracer_kw)
 
     def __enter__(self) -> Tracer:

@@ -341,6 +341,10 @@ def test_disagg_matches_colocated_single_device(tiny_cfg, tiny_mesh):
     # colocated path reports no shipping
     mc = eng_c.summary()
     assert "blocks_shipped" not in mc and mc["completed"] == len(reqs_c)
+    # ship waves dispatched while the decode scan was in flight: the store
+    # saw overlapped steps and reports how much host work the scan hid
+    assert m["overlap_steps"] > 0
+    assert "ship_overlap_frac" in m and 0.0 <= m["ship_overlap_frac"] <= 1.0
     # both pools fully unwound
     pf, dc, store = eng_d.backend._disagg[LAYER]
     assert pf.alloc.used_blocks == 0 and dc.alloc.used_blocks == 0

@@ -97,6 +97,45 @@ def test_trace_to_installs_exports_and_restores(tmp_path):
                for e in json.loads(path.read_text())["traceEvents"])
 
 
+def test_streaming_tracer_writes_incrementally(tmp_path):
+    """stream_path mode: events land in the file as they are recorded (flat
+    memory — the in-process buffer stays empty), the finalized document is
+    byte-for-byte valid trace-event JSON, and close() is idempotent."""
+    path = tmp_path / "stream.json"
+    clk = iter(np.arange(0.0, 10.0, 0.5))
+    tr = Tracer(clock=lambda: next(clk), stream_path=str(path))
+    with tr.span("prefill_chunk", track=("arm0", "prefill"), chunk=8):
+        tr.instant("first_token", req=1)
+    tr.count("tokens", 16, track="arm0")
+    # events went to disk, not the buffer; n_events still counts them
+    assert tr.events() == []
+    assert tr.n_events == 3
+    # mid-stream the file already holds the recorded events (valid after
+    # appending the closing bracket — the incremental-write contract)
+    doc = json.loads(path.read_text() + "]}")
+    assert {e["ph"] for e in doc["traceEvents"]} >= {"i", "C", "M"}
+    assert tr.export_chrome_trace("ignored") == str(path)
+    assert tr.close() == str(path)            # idempotent
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert {e["ph"] for e in evs} == {"M", "X", "i", "C"}
+    (chunk,) = [e for e in evs if e["name"] == "prefill_chunk"]
+    (ft,) = [e for e in evs if e["name"] == "first_token"]
+    assert (ft["pid"], ft["tid"]) == (chunk["pid"], chunk["tid"])
+
+
+def test_trace_to_streaming(tmp_path):
+    path = tmp_path / "t.json"
+    with trace_to(str(path), stream=True) as tr:
+        with tr.span("work"):
+            pass
+        assert tr.stream_path == str(path)
+        assert tr.events() == []
+    doc = json.loads(path.read_text())
+    assert any(e["name"] == "work" for e in doc["traceEvents"])
+    assert doc["displayTimeUnit"] == "ms"
+
+
 def test_null_tracer_has_no_per_call_allocations():
     """The disabled hot path: span()/instant()/count() return shared
     singletons and allocate nothing, so per-dispatch instrumentation is

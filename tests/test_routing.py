@@ -1,0 +1,296 @@
+"""Cache-status sync + prefix-aware fleet routing (repro.engine.routing).
+
+Covers the three delta paths that feed the board (register / evict /
+re-register), the contiguous-head overlap scoring, UCB weight learning,
+routed-placement determinism, and the end-to-end claim: on a shared-prefix
+trace, prefix-aware routing beats cache-blind baselines on fleet hit rate —
+on both the real ``FleetBackend`` and the vectorized ``SimBackend`` through
+the SAME ``route_arrays`` code path.
+"""
+import numpy as np
+import pytest
+
+from repro.decode import BlockAllocator, PrefixIndex, chain_hashes
+from repro.engine.routing import (CacheStatusBoard, PrefixAwareRouter,
+                                  WEIGHT_GRID)
+
+
+def _index_hashes(index):
+    """Every chain hash currently registered in a PrefixIndex."""
+    return sorted(index._chain_hash((parent, chunk))
+                  for parent, kids in index._children.items()
+                  for chunk in kids)
+
+
+def _board_hashes(board, replica):
+    """Every hash the board currently attributes to ``replica`` (with
+    multiplicity)."""
+    out = []
+    for h, owners in board._owners.items():
+        out.extend([h] * owners.get(replica, 0))
+    return sorted(out)
+
+
+# ---------------------------------------------------------------- wire format
+def test_chain_hashes_matches_index_deltas():
+    """The module-level chain over raw tokens (what the router computes)
+    equals the hashes the index emits on insert (what the board holds)."""
+    bs = 4
+    toks = np.arange(3 * bs + 2)
+    chain = chain_hashes(toks, bs)
+    assert len(chain) == 3
+
+    index = PrefixIndex(bs)
+    alloc = BlockAllocator(16, bs, on_evict=lambda b, k: index.drop(k))
+    seen = []
+    index.on_delta = lambda op, h: seen.append((op, h))
+    blocks = alloc.alloc(3)
+    index.insert(toks[:3 * bs], blocks, alloc)
+    assert seen == [("add", h) for h in chain]
+    assert _index_hashes(index) == sorted(chain)
+
+
+def test_chain_hashes_prefix_property():
+    toks = np.arange(32)
+    assert chain_hashes(toks, 8)[:2] == chain_hashes(toks[:17], 8)
+    assert chain_hashes(toks[:7], 8) == []
+    # different head -> chains diverge from the first block on
+    other = np.concatenate([[99], toks[1:]])
+    assert chain_hashes(other, 8)[0] != chain_hashes(toks, 8)[0]
+
+
+# ----------------------------------------------------- delta-update lifecycle
+def test_deltas_under_evict_and_reinsert():
+    """register -> evict -> re-register keeps the board an exact mirror of
+    the index: a dropped hash leaves the board before its block is reused,
+    so the global index never references a freed block."""
+    bs = 2
+    index = PrefixIndex(bs)
+    # 2 usable blocks (block 0 is null): B's alloc must evict both of A's
+    alloc = BlockAllocator(3, bs, on_evict=lambda b, k: index.drop(k))
+    board = CacheStatusBoard(1)
+    board.attach(0, index)
+
+    toks_a = np.array([1, 2, 3, 4])              # 2 chains
+    chain_a = chain_hashes(toks_a, bs)
+    ids = alloc.alloc(2)
+    index.insert(toks_a, ids, alloc)
+    alloc.free(ids)                              # retire: park evictable
+    assert _board_hashes(board, 0) == sorted(chain_a)
+
+    # pool exhausted -> LRU eviction reclaims A's blocks, dropping its
+    # mappings through on_evict -> index.drop -> board delta
+    toks_b = np.array([7, 8, 9, 10])
+    ids_b = alloc.alloc(2)
+    chain_b = chain_hashes(toks_b, bs)
+    assert _board_hashes(board, 0) == []         # A gone BEFORE reuse
+    index.insert(toks_b, ids_b, alloc)
+    assert _board_hashes(board, 0) == sorted(chain_b)
+    assert board.deltas == 2 + 2 + 2             # adds, drops, adds
+
+    # idempotent drop: a key already gone emits nothing
+    n = board.deltas
+    index.drop((None, (7, 8)))
+    assert board.deltas == n + 1
+    index.drop((None, (7, 8)))
+    assert board.deltas == n + 1
+
+
+def test_board_refcounts_duplicate_holders():
+    """One replica holding a hash in two indexes (disagg pf+dc) must survive
+    a single drop."""
+    board = CacheStatusBoard(2)
+    board.apply(0, "add", 42)
+    board.apply(0, "add", 42)
+    board.apply(1, "add", 42)
+    assert board.holders(42) == {0: 2, 1: 1}
+    board.apply(0, "drop", 42)
+    assert board.holders(42) == {0: 1, 1: 1}
+    board.apply(0, "drop", 42)
+    board.apply(1, "drop", 42)
+    assert len(board) == 0
+
+
+# ------------------------------------------------------------ overlap scoring
+def test_match_hashes_contiguous_head_only():
+    board = CacheStatusBoard(3)
+    chain = [10, 20, 30]
+    for h in chain:
+        board.apply(0, "add", h)
+    board.apply(1, "add", chain[0])
+    board.apply(2, "add", chain[1])      # holds block 1 but NOT block 0
+    counts = board.match_hashes(chain)
+    assert counts.tolist() == [3, 1, 0]  # replica 2 can't serve from cache
+
+
+def test_route_arrays_prefers_overlap_then_load():
+    r = PrefixAwareRouter()
+    # clear overlap winner
+    assert r.route_arrays(overlap_frac=[0.0, 0.9, 0.1],
+                          queue_depth=[0, 0, 0],
+                          free_frac=[0.5, 0.5, 0.5], slack_s=5.0) == 1
+    # equal overlap: urgency makes load the tie-breaker
+    assert r.route_arrays(overlap_frac=[0.5, 0.5],
+                          queue_depth=[8, 0],
+                          free_frac=[0.5, 0.5], slack_s=0.0) == 1
+    # infeasible replicas are never chosen; nothing feasible -> None
+    assert r.route_arrays(overlap_frac=[0.9, 0.0],
+                          queue_depth=[0, 0], free_frac=[0.5, 0.5],
+                          slack_s=1.0, feasible=[False, True]) == 1
+    assert r.route_arrays(overlap_frac=[0.9], queue_depth=[0],
+                          free_frac=[0.5], slack_s=1.0,
+                          feasible=[False]) is None
+
+
+def test_router_ucb_weight_learning():
+    rng = np.random.default_rng(0)
+
+    class _Out:
+        def __init__(self, wid, reward):
+            self.wid, self.reward = wid, reward
+
+    r = PrefixAwareRouter(learn=True, ucb_c=0.5)
+    # reward overlap-chasing: the affinity-heavy arms should win
+    for i in range(200):
+        overlap = rng.uniform(0, 1, 3)
+        idx = r.route_arrays(overlap_frac=overlap,
+                             queue_depth=rng.integers(0, 4, 3),
+                             free_frac=[0.5] * 3, slack_s=5.0, wid=i)
+        r.on_complete(_Out(i, float(overlap[idx])))
+    assert r._counts.sum() == 200
+    assert (r._counts > 0).all()                 # every arm explored
+    best = tuple(r.stats()["route_weights"])
+    assert best in WEIGHT_GRID
+    assert best[0] > 0.0                         # learned to value overlap
+    assert not r._pending_arm                    # no leaked episodes
+
+
+# --------------------------------------------------------------- sim backend
+def _sim_run(placement, n_reqs=2000, seed=0):
+    from repro.engine import (COMPRESSED, FixedPolicy, PlacementEngine,
+                              Request)
+    from repro.engine.sim_backend import SimBackend
+
+    backend = SimBackend(n_hosts=16, seed=seed, host_cache_slots=2)
+    eng = PlacementEngine(FixedPolicy(COMPRESSED, placement=placement),
+                          backend)
+    rng = np.random.default_rng(seed)
+    done = 0
+    submitted = 0
+    while submitted < n_reqs or backend.pending():
+        if submitted < n_reqs and not backend.unplaced \
+                and backend.pending() < 400:
+            k = min(128, n_reqs - submitted)
+            fams = rng.integers(0, 16, k)
+            eng.submit([Request(rid=submitted + j, app_id=int(rng.integers(3)),
+                                sla_s=30.0, prefix_family=int(fams[j]),
+                                prefix_frac=0.5) for j in range(k)])
+            submitted += k
+        done += len(eng.step())
+    m = eng.summary()
+    assert done == n_reqs
+    return m, placement
+
+
+def test_sim_routed_beats_least_loaded_hit_rate():
+    from repro.sched.baselines import LeastLoadedPlacement
+
+    routed, router = _sim_run(PrefixAwareRouter())
+    blind, _ = _sim_run(LeastLoadedPlacement())
+    assert router.routed == 2000              # every request went through
+    assert routed["prefix_hit_rate"] > blind["prefix_hit_rate"] + 0.2
+    assert routed["mean_response_s"] <= blind["mean_response_s"]
+
+
+def test_sim_routed_deterministic():
+    a, _ = _sim_run(PrefixAwareRouter())
+    b, _ = _sim_run(PrefixAwareRouter())
+    assert a["prefix_hit_rate"] == b["prefix_hit_rate"]
+    assert a["mean_response_s"] == b["mean_response_s"]
+
+
+# -------------------------------------------------------------- real fleet
+def _fleet_reqs(vocab, n, n_families=4, seed=3, head_blocks=6, bs=8):
+    from repro.engine import Request
+    rng = np.random.default_rng(seed)
+    heads = [rng.integers(0, vocab, head_blocks * bs).astype(np.int32)
+             for _ in range(n_families)]
+    return [Request(rid=i, app_id=int(rng.integers(3)),
+                    tokens=np.concatenate(
+                        [heads[int(rng.integers(n_families))],
+                         rng.integers(0, vocab, 3).astype(np.int32)]),
+                    sla_s=4.0, max_new=2)
+            for i in range(n)]
+
+
+def _run_fleet(tiny_cfg, tiny_mesh, placement, *, n=12, n_replicas=2,
+               num_blocks=None, seed=3, check_sync=False):
+    from repro.engine import LAYER, FixedPolicy, PlacementEngine
+    from repro.engine.fleet import FleetBackend
+
+    fleet = FleetBackend(tiny_cfg, tiny_mesh, n_replicas=n_replicas,
+                         cache_len=64, max_batch=4, decode="paged",
+                         block_size=8, scan_tokens=4, prefix_sharing=True,
+                         num_blocks=num_blocks)
+    if placement == "routed":
+        placement = PrefixAwareRouter(fleet.board)
+    eng = PlacementEngine(FixedPolicy(LAYER, placement=placement), fleet)
+    for _ in range(2):                        # second pass hits warm caches
+        reqs = _fleet_reqs(tiny_cfg.vocab_size, n, seed=seed)
+        for i in range(0, n, 3):
+            eng.submit(reqs[i:i + 3])
+            eng.step()
+            if check_sync:
+                _assert_board_mirrors_indexes(fleet)
+        eng.drain()
+        if check_sync:
+            _assert_board_mirrors_indexes(fleet)
+    return eng, fleet, reqs
+
+
+def _assert_board_mirrors_indexes(fleet):
+    """THE sync invariant: the board is exactly the union of every live
+    index's registered chains — never a freed block's hash."""
+    for i, rep in enumerate(fleet.replicas):
+        expect = sorted(h for s in rep._all_scheds()
+                        for h in _index_hashes(s.index))
+        assert _board_hashes(fleet.board, i) == expect
+
+
+@pytest.mark.slow
+def test_fleet_delta_sync_under_eviction(tiny_cfg, tiny_mesh):
+    """Undersized pools force LRU eviction mid-run; the board must mirror
+    the indexes after every step (adds from retire, drops from evict)."""
+    eng, fleet, _ = _run_fleet(tiny_cfg, tiny_mesh, "routed",
+                               num_blocks=1 + 14, check_sync=True)
+    m = eng.summary()
+    assert m["completed"] == 24
+    assert m["sync_deltas"] > 0
+    live = sum(sum(o.values()) for o in fleet.board._owners.values())
+    drops = (m["sync_deltas"] - live) // 2
+    assert drops > 0                          # eviction path exercised
+
+
+@pytest.mark.slow
+def test_fleet_routed_deterministic(tiny_cfg, tiny_mesh):
+    runs = []
+    for _ in range(2):
+        eng, fleet, reqs = _run_fleet(tiny_cfg, tiny_mesh, "routed")
+        runs.append((fleet.routed_per_replica.tolist(),
+                     [r.output.tolist() for r in reqs],
+                     eng.summary()["route_expected_overlap"]))
+    assert runs[0] == runs[1]
+
+
+@pytest.mark.slow
+def test_fleet_routed_beats_random_hit_rate(tiny_cfg, tiny_mesh):
+    from repro.sched.baselines import RandomPlacement
+
+    routed_eng, _, _ = _run_fleet(tiny_cfg, tiny_mesh, "routed",
+                                  num_blocks=1 + 20)
+    random_eng, _, _ = _run_fleet(tiny_cfg, tiny_mesh, RandomPlacement(3),
+                                  num_blocks=1 + 20)
+    mr, mb = routed_eng.summary(), random_eng.summary()
+    assert mr["completed"] == mb["completed"] == 24
+    assert mr["prefix_hit_rate"] > mb["prefix_hit_rate"]
+    assert mr["route_expected_overlap"] > 0
